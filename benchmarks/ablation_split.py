@@ -1,0 +1,26 @@
+"""Ablation (beyond-paper): isolate Algorithm 1's dynamic split from the
+rest of DynaServe.  All three arms share unified instances + SLO-aware
+batching + chunked transfer; only the split policy differs."""
+from benchmarks.common import Csv, cost_for, make_policy, run_sim
+from repro.data import generate_trace, hybrid_trace
+from repro.sim import DynaServePolicy
+
+
+def main(csv: Csv | None = None, duration=32.0):
+    csv = csv or Csv()
+    cost = cost_for()
+    traces = {
+        "azure_code": generate_trace("azure_code", 3.5, duration, seed=31),
+        "hybrid": hybrid_trace(7.0, duration, seed=31),
+    }
+    for w, reqs in traces.items():
+        for mode in ("none", "static", "dynamic"):
+            m = run_sim(cost, DynaServePolicy(cost, split_mode=mode), reqs)
+            csv.add(f"ablation/{w}/split_{mode}", m.goodput,
+                    f"goodput={m.goodput:.1f} p99={m.p99_tbt()*1e3:.0f}ms "
+                    f"attain={m.token_attainment:.3f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.core.costmodel import A100, BatchCostModel     # noqa: E402
+from repro.sim import (                                   # noqa: E402
+    ClusterSim, ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
+    SimConfig,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def cost_for(model: str = "qwen2.5-14b", tp: int = 1) -> BatchCostModel:
+    return BatchCostModel(get_config(model), A100, tp_degree=tp)
+
+
+def make_policy(name: str, cost, **kw):
+    if name == "coloc":
+        return ColocationPolicy(chunk=kw.get("chunk", 2048))
+    if name == "disagg":
+        return DisaggregationPolicy()
+    if name == "dyna":
+        return DynaServePolicy(cost, **kw)
+    raise ValueError(name)
+
+
+def run_sim(cost, policy, reqs, n_instances: int = 2):
+    sim = ClusterSim(cost, policy, SimConfig(n_instances=n_instances))
+    return sim.run(reqs)
+
+
+def capacity_search(cost, policy_factory, trace_factory, *, qps_lo=0.25,
+                    qps_hi=20.0, p99_target=0.100, iters=5,
+                    duration=32.0, attain_target=0.99):
+    """Max sustainable QPS with p99 TBT under the SLO (paper §6.3:
+    'allowing only 1% of requests to violate the TBT SLO')."""
+    import numpy as _np
+    # Workload-scaled queueing bound: TBT alone misses prefill queueing
+    # (an overloaded system would still "pass" after draining), so bound
+    # p99 TTFT at a few multiples of the workload's intrinsic SLO-paced
+    # prefill time (long-prompt workloads legitimately have multi-second
+    # TTFT under 100 ms TBT batching).
+    probe = trace_factory(qps_lo)
+    p95_prompt = float(_np.percentile([r.P for r in probe], 95)) if probe else 2048
+    rate = max(1.0, cost.max_prefill_tokens(0.1, 8, 2048)) / 0.1
+    ttft_bound = max(8.0, 4.0 * p95_prompt / rate + 2.0)
+    best = 0.0
+    lo, hi = qps_lo, qps_hi
+    for _ in range(iters):
+        q = (lo + hi) / 2
+        m = run_sim(cost, policy_factory(), trace_factory(q))
+        p99_ttft = (float(_np.percentile(m.ttfts, 99))
+                    if len(m.ttfts) else float("inf"))
+        ok = (m.completed >= 0.95 * m.offered and
+              m.token_attainment >= attain_target and
+              p99_ttft <= ttft_bound)
+        if ok:
+            best = q
+            lo = q
+        else:
+            hi = q
+    return best
+
+
+class Csv:
+    """Benchmark output contract: ``name,us_per_call,derived`` lines."""
+
+    def __init__(self):
+        self.lines = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        line = f"{name},{us_per_call:.3f},{derived}"
+        self.lines.append(line)
+        print(line, flush=True)
+
+
+def timed(fn, *args, repeat=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

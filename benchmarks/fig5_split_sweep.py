@@ -1,0 +1,76 @@
+"""Paper Figure 5: throughput of a 1024-prompt/1024-output stream on two
+instances as the split position sweeps 0..L.  Position 1024 == vanilla PD
+disaggregation; the optimum is an interior point (paper finds ~1358,
+PD-ratio ~0.3 past the boundary)."""
+import numpy as np
+
+from benchmarks.common import Csv, cost_for, run_sim
+from repro.core.request import MicroRequest, Request
+from repro.sim.policies import BasePolicy
+from repro.core.local_scheduler import LocalScheduler
+from repro.core.kv_transfer import plan_chunked_transfer
+
+
+class FixedSplitPolicy(BasePolicy):
+    def __init__(self, cost, s: int):
+        self.s = s
+        self.cost = cost
+        self._pending = {}
+
+    def make_local_scheduler(self, iid, cost, slo):
+        return LocalScheduler(cost, slo, slo_aware=True)
+
+    def place(self, r: Request, sim, now: float):
+        from repro.sim.simulator import SimMicro
+        s = min(self.s, r.true_L)
+        out = []
+        if s > 0:
+            a = MicroRequest(r, "alpha", 0, s)
+            sa = SimMicro(a, a.prefill_tokens, a.decode_tokens, 0)
+            out.append((0, sa))
+        if s < r.true_L:
+            b = MicroRequest(r, "beta", s, r.true_L)
+            sb = SimMicro(b, b.prefill_tokens, b.decode_tokens, s)
+            if out:
+                sb.ready = float("inf")
+                self._pending[out[0][1].rid] = sb
+            out.append((1, sb))
+        return out
+
+    def on_micro_finished(self, m, sim, now):
+        b = self._pending.pop(m.rid, None)
+        if b is not None:
+            plan = plan_chunked_transfer(sim.cost, m.mr.end, 512)
+            sim.release_beta(b, now + plan.exposed, plan.exposed,
+                             plan.total_bytes)
+
+
+def trace(qps=1.6, duration=60.0):
+    rng = np.random.default_rng(1)
+    t, out, i = 0.0, [], 0
+    while t < duration:
+        t += rng.exponential(1 / qps)
+        out.append(Request(f"r{i}", t, 1024, 1024))
+        i += 1
+    return out
+
+
+def main(csv: Csv | None = None):
+    csv = csv or Csv()
+    cost = cost_for("qwen2.5-32b", tp=2)
+    best = (0, -1)
+    for s in [256, 512, 768, 1024, 1152, 1280, 1408, 1536, 1792, 2048]:
+        m = run_sim(cost, FixedSplitPolicy(cost, s), trace())
+        thr = m.throughput_tokens
+        if thr > best[1]:
+            best = (s, thr)
+        csv.add(f"fig5/split_{s}", thr,
+                f"tok_s={thr:.1f} p99={m.p99_tbt()*1e3:.0f}ms"
+                + (" <-PD-boundary" if s == 1024 else ""))
+    csv.add("fig5/optimum", best[1],
+            f"s*={best[0]} interior={'yes' if best[0] != 1024 else 'no'}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Figure 8: goodput vs QPS for DynaServe / PD-coloc / PD-disagg
+across the four workloads (Qwen-2.5-14B row; 32B/72B via --model)."""
+import argparse
+
+from benchmarks.common import Csv, cost_for, make_policy, run_sim
+from repro.data import generate_trace
+
+WORKLOADS = {
+    "burstgpt": [2, 4, 6, 8],
+    "azure_code": [0.5, 1, 2, 3],
+    "arxiv_summarization": [0.5, 1, 2, 3],
+    "mini_reasoning": [1, 2, 3, 4],
+}
+
+
+def main(csv: Csv | None = None, model="qwen2.5-14b", tp=1, duration=32.0):
+    csv = csv or Csv()
+    cost = cost_for(model, tp)
+    summary = {}
+    for w, qpss in WORKLOADS.items():
+        peak = {}
+        for qps in qpss:
+            reqs = generate_trace(w, qps, duration, seed=11)
+            for sysname in ("coloc", "disagg", "dyna"):
+                m = run_sim(cost, make_policy(sysname, cost), reqs)
+                g = m.goodput
+                peak[sysname] = max(peak.get(sysname, 0.0), g)
+                csv.add(f"fig8/{model}/{w}/q{qps}/{sysname}", g,
+                        f"goodput={g:.1f} attain={m.token_attainment:.3f} "
+                        f"p99={m.p99_tbt()*1e3:.0f}ms")
+        summary[w] = peak
+        csv.add(f"fig8/{model}/{w}/peak", peak["dyna"],
+                f"vs_coloc={peak['dyna']/max(peak['coloc'],1e-9):.2f}x "
+                f"vs_disagg={peak['dyna']/max(peak['disagg'],1e-9):.2f}x")
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen2.5-14b")
+    ap.add_argument("--tp", type=int, default=1)
+    a = ap.parse_args()
+    main(model=a.model, tp=a.tp)

@@ -1,0 +1,48 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp oracle wall time on CPU,
+plus the analytic TPU-v5e roofline estimate for the production tile."""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, timed
+from repro.kernels.ops import (
+    chunked_prefill_attention_op, chunked_prefill_attention_ref,
+    paged_decode_attention_op, paged_decode_attention_ref,
+)
+
+
+def main(csv: Csv | None = None):
+    csv = csv or Csv()
+    rng = np.random.default_rng(0)
+    B, Tq, S, H, KV, hd = 1, 64, 256, 8, 2, 128
+    q = jnp.asarray(rng.standard_normal((B, Tq, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    off = jnp.zeros((B,), jnp.int32)
+    _, us = timed(lambda: chunked_prefill_attention_op(
+        q, k, v, off, bq=32, bk=64, interpret=True).block_until_ready())
+    _, us_ref = timed(lambda: chunked_prefill_attention_ref(
+        q, k, v, off).block_until_ready())
+    flops = 4 * B * Tq * S * H * hd
+    v5e = flops / 197e12 * 1e6
+    csv.add("kernel/chunked_prefill", us,
+            f"ref_us={us_ref:.0f} tpu_v5e_roofline_us={v5e:.2f}")
+
+    n_pages, page, ppseq = 64, 16, 16
+    q2 = jnp.asarray(rng.standard_normal((4, H, hd)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, page, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, page, KV, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, n_pages, (4, ppseq)), jnp.int32)
+    lens = jnp.full((4,), page * ppseq, jnp.int32)
+    _, us = timed(lambda: paged_decode_attention_op(
+        q2, kp, vp, tbl, lens, interpret=True).block_until_ready())
+    _, us_ref = timed(lambda: paged_decode_attention_ref(
+        q2, kp, vp, tbl, lens).block_until_ready())
+    bytes_moved = 2 * 4 * ppseq * page * KV * hd * 4
+    v5e = bytes_moved / 819e9 * 1e6
+    csv.add("kernel/paged_decode", us,
+            f"ref_us={us_ref:.0f} tpu_v5e_hbm_roofline_us={v5e:.2f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

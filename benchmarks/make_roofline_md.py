@@ -1,0 +1,73 @@
+"""Render the §Roofline markdown table from results/dryrun_v4 and inject
+it into EXPERIMENTS.md (between the ROOFLINE_TABLE markers)."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import load_records, model_flops  # noqa: E402
+
+ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+NOTES = {
+    "compute": "more MXU-efficient tiling / fewer wasted flops",
+    "memory": "lower-precision storage (int8 KV/weights) or better reuse",
+    "collective": "resharded weights/activations or overlap-friendly layout",
+}
+
+
+def render(mesh_filter: str) -> str:
+    recs = [r for r in load_records() if r["mesh"] == mesh_filter]
+    lines = [
+        "| arch | shape | step | compute (ms) | memory (ms) | collective (ms)"
+        " | dominant | MODEL_FLOPS | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], ORDER[r["shape"]])):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['step']} |"
+                         f" ERROR {r.get('error', '')[:60]} |||||||")
+            continue
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        hg = r["flops_per_device"] * r["n_chips"]
+        useful = mf / hg if hg else 0.0
+        note = []
+        if r.get("window_override"):
+            note.append(f"SW{r['window_override']}")
+        note.append(f"↓{dom}: {NOTES[dom]}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} |"
+            f" {terms['compute']*1e3:.2f} | {terms['memory']*1e3:.2f} |"
+            f" {terms['collective']*1e3:.2f} | **{dom}** | {mf:.2e} |"
+            f" {min(useful, 1.0):.3f} | {'; '.join(note)} |")
+    return "\n".join(lines)
+
+
+def main():
+    single = render("16x16")
+    multi_recs = [r for r in load_records() if r["mesh"] == "2x16x16"]
+    n_ok = sum(1 for r in multi_recs if r.get("status") == "ok")
+    block = (
+        "### Single-pod 16×16 (256 chips) — baseline for all 40 combos\n\n"
+        + single
+        + f"\n\nMulti-pod 2×16×16: {n_ok}/{len(multi_recs)} combos lowered"
+        " + compiled (full records in results/dryrun_v5)."
+    )
+    path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## )",
+                  "<!-- ROOFLINE_TABLE -->\n" + block + "\n\n",
+                  text, flags=re.S) if "<!-- ROOFLINE_TABLE -->" in text else text
+    open(path, "w").write(text)
+    print(f"injected: {len(single.splitlines())-2} single-pod rows, "
+          f"{n_ok} multi-pod ok")
+
+
+if __name__ == "__main__":
+    main()

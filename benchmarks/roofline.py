@@ -1,0 +1,72 @@
+"""Roofline table from the dry-run JSON records (deliverable g).
+
+Per (arch x shape x mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs."""
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, Csv
+from repro.configs import INPUT_SHAPES, get_config
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if sh.step == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n * tokens
+    if sh.step == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * sh.global_batch
+
+
+def load_records(out_dir=None):
+    if out_dir is None:
+        for cand in ("dryrun_v5", "dryrun_v4", "dryrun_v3", "dryrun"):
+            d = os.path.join(RESULTS_DIR, cand)
+            if glob.glob(os.path.join(d, "*.json")):
+                out_dir = d
+                break
+        else:
+            return []
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main(csv: Csv | None = None):
+    csv = csv or Csv()
+    recs = load_records()
+    if not recs:
+        csv.add("roofline/missing", 0.0,
+                "run `python -m repro.launch.dryrun --all` first")
+        return csv
+    for r in recs:
+        if r.get("status") != "ok":
+            csv.add(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                    f"ERROR {r.get('error', '')[:80]}")
+            continue
+        rf = r["roofline"]
+        terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                 "collective": rf["collective_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["flops_per_device"] * r["n_chips"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        csv.add(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                terms[dom] * 1e6,
+                f"comp={terms['compute']*1e3:.2f}ms mem={terms['memory']*1e3:.2f}ms "
+                f"coll={terms['collective']*1e3:.2f}ms dom={dom} "
+                f"useful_ratio={useful:.3f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each benchmark prints ``name,us_per_call,derived`` CSV lines; this runner
+executes them all (the dry-run-dependent roofline table reads
+results/dryrun/*.json if present).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig9,tab2]
+"""
+import argparse
+import sys
+import time
+
+from benchmarks.common import Csv
+
+MODULES = [
+    "tab1_motivation",
+    "fig5_split_sweep",
+    "fig8_goodput",
+    "fig9_capacity",
+    "tab2_hybrid",
+    "fig10_replay",
+    "fig11_slo_batching",
+    "tab3_overhead",
+    "tab4_sensitivity",
+    "kv_transfer_overlap",
+    "ablation_split",
+    "kernel_bench",
+    "roofline",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of module names")
+    args = ap.parse_args(argv)
+    sel = args.only.split(",") if args.only else None
+    csv = Csv()
+    failures = []
+    for mod_name in MODULES:
+        if sel and not any(s in mod_name for s in sel):
+            continue
+        t0 = time.time()
+        print(f"### benchmarks.{mod_name}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main(csv)
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod_name, repr(e)))
+            print(f"!! {mod_name} FAILED: {e!r}", flush=True)
+        print(f"### {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+    print(f"\n{len(csv.lines)} benchmark rows, {len(failures)} failures")
+    if failures:
+        for name, err in failures:
+            print(f"  FAILED {name}: {err}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the whole stack in one minute on CPU.
+
+1. Instantiate a reduced Qwen-2.5-style model.
+2. Train it for 30 steps on the synthetic pipeline.
+3. Serve 4 requests through DynaServe's two-level scheduler on two real
+   engine instances, with micro-request splitting + KV handoff.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import token_batches
+from repro.engine.cluster import ServingCluster
+from repro.models.model import init_params
+from repro.training import train_loop
+from repro.training.optimizer import AdamWConfig
+
+
+def main():
+    cfg = get_smoke_config("qwen2.5-14b")
+    print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model})")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    res = train_loop(cfg, params, token_batches(cfg, 8, 64),
+                     AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30),
+                     steps=30, log_every=10)
+    print("train:", [f"step {h['step']}: loss {h['loss']:.3f}"
+                     for h in res["history"]])
+    params = res["params"]
+
+    cluster = ServingCluster(cfg, params, n_instances=2, max_len=160)
+    rng = np.random.default_rng(0)
+    reqs = [cluster.submit(rng.integers(0, cfg.vocab_size, int(n)), 12)
+            for n in (64, 40, 24, 48)]
+    cluster.run_until_done(reqs)
+    for r in reqs:
+        print(f"  {r.req.rid}: P={r.req.P} generated={r.generated}")
+    print(f"KV handoff between instances: {cluster.kv_bytes_moved} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end serving driver (the paper's kind of workload): batched
+requests with skewed prefill/decode mixes served by DynaServe's full
+stack — global binary-search splitting (Algorithm 1), per-instance batch
+composition, real cross-instance chunked KV/state handoff — on real JAX
+engines.  Also runs the same batch in colocation mode and verifies the
+generations are token-identical (scheduling must never change results).
+
+  PYTHONPATH=src python examples/serve_cluster.py [--arch mamba2-780m]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.engine.cluster import ServingCluster
+from repro.models.model import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(42)
+
+    # skewed mix: long-prompt/short-output + short-prompt/long-output
+    specs = []
+    for i in range(args.requests):
+        if i % 2 == 0:
+            specs.append((int(rng.integers(48, 96)), 6))    # prefill-heavy
+        else:
+            specs.append((int(rng.integers(8, 20)), 24))    # decode-heavy
+
+    def serve(split):
+        cluster = ServingCluster(cfg, params, n_instances=2,
+                                 n_slots=args.requests + 2,
+                                 max_len=192, split=split)
+        t0 = time.time()
+        reqs = [cluster.submit(rng_local.integers(0, cfg.vocab_size, p), d)
+                for (p, d), rng_local in
+                zip(specs, [np.random.default_rng(7 + i)
+                            for i in range(len(specs))])]
+        cluster.run_until_done(reqs)
+        return reqs, time.time() - t0, cluster
+
+    reqs_dyn, dt_dyn, cl = serve(split=True)
+    reqs_col, dt_col, _ = serve(split=False)
+
+    toks = sum(len(r.generated) for r in reqs_dyn)
+    print(f"arch={cfg.name} requests={len(reqs_dyn)} output_tokens={toks}")
+    print(f"DynaServe (2 unified instances): {dt_dyn:.2f}s wall "
+          f"({toks/dt_dyn:.1f} tok/s CPU), KV handoff "
+          f"{cl.kv_bytes_moved/1024:.1f} KiB")
+    print(f"Colocation  (no splitting):      {dt_col:.2f}s wall")
+    same = all(a.generated == b.generated
+               for a, b in zip(reqs_dyn, reqs_col))
+    print("generations identical across scheduling modes:", same)
+    assert same
+    for r in reqs_dyn[:4]:
+        print(f"  {r.req.rid}: P={r.req.P} D={r.max_new_tokens} "
+              f"-> {r.generated[:6]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Assigned input shapes.
+
+``step`` selects which jitted program the dry-run lowers:
+  train_step    — full forward+backward+optimizer
+  prefill_step  — forward over the whole prompt, KV cache out
+  serve_step    — ONE new token against a KV cache of ``seq_len``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str          # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,9 @@
+"""DynaServe's primary contribution: Adaptive Request Partitioning and
+Scheduling (APS) — micro-requests, the two-level scheduler, and chunked
+KV transfer."""
+from repro.core.request import Request, MicroRequest, split_request  # noqa: F401
+from repro.core.costmodel import HardwareSpec, A100, TPU_V5E, BatchCostModel  # noqa: F401
+from repro.core.local_scheduler import LocalScheduler, ProfileTable  # noqa: F401
+from repro.core.predictor import ExecutionPredictor, QueuedWork  # noqa: F401
+from repro.core.global_scheduler import GlobalScheduler  # noqa: F401
+from repro.core.kv_transfer import ChunkTransferPlan, plan_chunked_transfer  # noqa: F401

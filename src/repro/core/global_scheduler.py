@@ -1,0 +1,130 @@
+"""Global scheduler (paper Algorithm 1).
+
+Per arriving request: bounded binary search (K probes) over the partition
+ratio phi, driving the predicted completion times of the alpha and beta
+instances to equality; then commit the two micro-requests.  Cold start
+(idle cluster) takes the PD-disaggregation split phi = P/L directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import BatchCostModel
+from repro.core.predictor import ExecutionPredictor, QueuedWork
+from repro.core.request import MicroRequest, Request, split_request
+
+
+@dataclasses.dataclass
+class InstanceView:
+    """What the global scheduler knows about one unified instance."""
+    iid: int
+    queue: List[QueuedWork]
+
+
+@dataclasses.dataclass
+class Placement:
+    alpha: Optional[MicroRequest]
+    beta: Optional[MicroRequest]
+    alpha_instance: Optional[int]
+    beta_instance: Optional[int]
+    phi: float
+    predicted_t1: float
+    predicted_t2: float
+    probes: int
+    overhead_s: float
+
+
+class GlobalScheduler:
+    def __init__(self, cost: BatchCostModel, slo: float = 0.100,
+                 max_probes: int = 6, epsilon: float = 0.015,
+                 margin_tokens: int = 20,
+                 split_gain_threshold: float = 0.05):
+        self.cost = cost
+        self.predictor = ExecutionPredictor(cost, slo)
+        self.max_probes = max_probes
+        self.epsilon = epsilon
+        # split only when it beats whole-request placement by this margin
+        self.split_gain_threshold = split_gain_threshold
+        # paper §5: configurable decode-length margin against
+        # underestimation (20 tokens in their setup)
+        self.margin_tokens = margin_tokens
+        self._rr = 0
+
+    # ------------------------------------------------------------------
+    def _work_of(self, mr: MicroRequest, ready: float = 0.0) -> QueuedWork:
+        return QueuedWork(
+            rid=mr.rid,
+            prefill_remaining=mr.prefill_tokens,
+            decode_remaining=mr.decode_tokens,
+            ctx=mr.start if mr.role == "beta" else 0,
+            ready=ready,
+        )
+
+    def pick_pair(self, instances: Sequence[InstanceView]) -> Tuple[int, int]:
+        """Round-robin over the unified pool (paper §3.1), tie-broken by
+        predicted load so a hot instance is never the alpha target."""
+        n = len(instances)
+        if n == 1:
+            return 0, 0
+        order = sorted(range(n), key=lambda i: (
+            self.predictor.drain_time(instances[i].queue), (i - self._rr) % n))
+        self._rr = (self._rr + 1) % n
+        return order[0], order[1]
+
+    def schedule(self, r: Request,
+                 instances: Sequence[InstanceView]) -> Placement:
+        t0 = time.perf_counter()
+        D = r.D_pred + self.margin_tokens
+        r_eff = dataclasses.replace(r, predicted_decode=D)
+        ia, ib = self.pick_pair(instances)
+        qa, qb = instances[ia].queue, instances[ib].queue
+
+        # cold start: both instances idle -> PD-disaggregation split
+        if not qa and not qb:
+            phi = r_eff.P / r_eff.L
+            alpha, beta = split_request(r_eff, phi)
+            t1 = self.predictor.completion_time(qa, self._work_of(alpha) if alpha else None)
+            t2 = self.predictor.completion_time(qb, self._work_of(beta) if beta else None)
+            return Placement(alpha, beta, ia if alpha else None,
+                             ib if beta else None, phi, t1, t2, 0,
+                             time.perf_counter() - t0)
+
+        lo, hi = 0.0, 1.0
+        phi = r_eff.P / r_eff.L          # start from PD disaggregation
+        best = None
+        probes = 0
+        for _ in range(self.max_probes):
+            probes += 1
+            alpha, beta = split_request(r_eff, phi)
+            t1 = self.predictor.completion_time(
+                qa, self._work_of(alpha) if alpha else None)
+            t2 = self.predictor.completion_time(
+                qb, self._work_of(beta) if beta else None)
+            gap = abs(t1 - t2)
+            if best is None or gap < best[0]:
+                best = (gap, phi, alpha, beta, t1, t2)
+            rel = gap / max(t1, t2, 1e-9)
+            if rel <= self.epsilon:
+                break
+            if t1 < t2:      # alpha side under-loaded -> push split later
+                lo = phi
+            else:
+                hi = phi
+            phi = (lo + hi) / 2.0
+        _, phi, alpha, beta, t1, t2 = best
+
+        # Paper §3.1: "when the system is underutilized or the prompt is
+        # short, APS may avoid partitioning altogether".  Splitting costs
+        # a handoff gap in the TBT stream, so take it only when it
+        # clearly beats running the request whole on the idler instance.
+        whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
+        t_whole = self.predictor.completion_time(qa, self._work_of(whole))
+        if t_whole <= max(t1, t2) * (1.0 + self.split_gain_threshold):
+            return Placement(whole, None, ia, None, 1.0, t_whole, 0.0,
+                             probes, time.perf_counter() - t0)
+        return Placement(alpha, beta, ia if alpha else None,
+                         ib if beta else None, phi, t1, t2, probes,
+                         time.perf_counter() - t0)

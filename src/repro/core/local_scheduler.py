@@ -1,0 +1,145 @@
+"""Local scheduler (paper Algorithm 2): SLO-aware batch composition.
+
+Per executed batch the scheduler RECORDs (plen, ctx, dnum, time) into a
+profile table; before composing the next batch it (1) admits every decode
+request (latency-critical), (2) consults the table (falling back to the
+analytic cost model exactly like the paper seeds its table from offline
+profiling) for the max prefill budget M that keeps predicted latency
+under the TBT SLO, and (3) greedily fills M from the prefill queue in
+arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import BatchCostModel
+
+
+def _bucket(x: int, base: int = 2) -> int:
+    """Geometric bucketing so the table generalizes across nearby shapes."""
+    if x <= 0:
+        return 0
+    return 1 << max(0, int(math.log2(max(1, x)) + 0.5))
+
+
+class ProfileTable:
+    """(plen, ctx, dnum) -> EWMA latency, refined with execution feedback."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.table: Dict[Tuple[int, int, int], float] = {}
+        self.records = 0
+
+    def key(self, plen: int, ctx: int, dnum: int):
+        return (_bucket(plen), _bucket(ctx), _bucket(dnum))
+
+    def record(self, plen: int, ctx: int, dnum: int, time: float) -> None:
+        k = self.key(plen, ctx, dnum)
+        if k in self.table:
+            self.table[k] = (1 - self.alpha) * self.table[k] + self.alpha * time
+        else:
+            self.table[k] = time
+        self.records += 1
+
+    def lookup(self, plen: int, ctx: int, dnum: int) -> Optional[float]:
+        return self.table.get(self.key(plen, ctx, dnum))
+
+
+@dataclasses.dataclass
+class PrefillWork:
+    """A queued micro-request's outstanding prefill."""
+    rid: str
+    remaining: int              # prefill tokens left
+    ctx: int                    # tokens already cached (position of chunk)
+
+
+@dataclasses.dataclass
+class DecodeWork:
+    rid: str
+    ctx: int                    # current context length
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    decodes: List[DecodeWork]
+    prefills: List[Tuple[PrefillWork, int]]   # (work, granted tokens)
+    predicted_latency: float
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(g for _, g in self.prefills)
+
+    @property
+    def dnum(self) -> int:
+        return len(self.decodes)
+
+
+class LocalScheduler:
+    def __init__(self, cost: BatchCostModel, slo: float = 0.100,
+                 max_batch_requests: int = 256,
+                 min_chunk: int = 16, slo_aware: bool = True,
+                 static_chunk: Optional[int] = None,
+                 slo_margin: float = 0.88):
+        """``slo_aware=False`` + ``static_chunk`` reproduces the vLLM
+        chunked-prefill baseline (fixed chunk regardless of load).
+        ``slo_margin`` keeps planned batches below the SLO with headroom
+        so jitter/bucketing cannot push the p99 over."""
+        self.cost = cost
+        self.slo = slo
+        self.profile = ProfileTable()
+        self.max_batch_requests = max_batch_requests
+        self.min_chunk = min_chunk
+        self.slo_aware = slo_aware
+        self.static_chunk = static_chunk
+        self.slo_margin = slo_margin
+
+    # ---------------- Algorithm 2 ----------------
+    def record(self, plan: BatchPlan, measured: float) -> None:
+        ctx = int(sum(d.ctx for d in plan.decodes) / max(1, plan.dnum))
+        self.profile.record(plan.prefill_tokens, ctx, plan.dnum, measured)
+
+    def max_prefill_allowed(self, ctx: int, dnum: int, p_ctx: int = 0) -> int:
+        if not self.slo_aware:
+            return self.static_chunk or 2048
+        slo = self.slo * self.slo_margin
+        # profile-table refinement: probe geometric plen candidates and
+        # take the largest whose recorded latency fits the SLO; fall back
+        # to the analytic inversion where the table is cold.
+        analytic = self.cost.max_prefill_tokens(slo, dnum, ctx, p_ctx=p_ctx)
+        best = None
+        plen = 1
+        while plen <= 1 << 20:
+            t = self.profile.lookup(plen, ctx, dnum)
+            if t is not None and t <= slo:
+                best = plen if best is None else max(best, plen)
+            plen <<= 1
+        if best is None:
+            return analytic
+        # trust the table but never stray more than 2x from the model
+        return int(min(max(best, analytic / 2), analytic * 2))
+
+    def next_batch(self, prefill_queue: Sequence[PrefillWork],
+                   decode_queue: Sequence[DecodeWork]) -> BatchPlan:
+        decodes = list(decode_queue[: self.max_batch_requests])
+        d_ctx = int(sum(d.ctx for d in decodes) / max(1, len(decodes)))
+        p_ctx = max((w.ctx for w in prefill_queue), default=0)
+        M = self.max_prefill_allowed(d_ctx, len(decodes), p_ctx=p_ctx)
+        grants: List[Tuple[PrefillWork, int]] = []
+        budget = M
+        for w in prefill_queue:
+            if budget <= 0 or len(decodes) + len(grants) >= self.max_batch_requests:
+                break
+            g = min(w.remaining, budget)
+            if g <= 0:
+                continue
+            # avoid degenerate 1-token prefill slivers unless finishing
+            if g < min(self.min_chunk, w.remaining):
+                break
+            grants.append((w, g))
+            budget -= g
+        plen = sum(g for _, g in grants)
+        p_ctx = grants[0][0].ctx if grants else 0
+        lat = self.cost.mixed_batch_latency(plen, p_ctx, len(decodes), d_ctx)
+        return BatchPlan(decodes, grants, lat)

@@ -1,0 +1,93 @@
+"""The micro-request abstraction (paper §3.1).
+
+A request r = (P prompt tokens, D decode tokens, L = P + D) is split at
+token boundary s = ceil(phi * L) into r_alpha = tokens [0, s) and
+r_beta = tokens [s, L).  A micro-request is a contiguous token span that
+may cover prefill work, decode work, or both:
+
+    alpha prefill  = [0, min(s, P))
+    alpha decode   = [P, s)            (non-empty iff s > P)
+    beta  prefill  = [s, P)            (non-empty iff s < P)
+    beta  decode   = [max(s, P), L)
+
+phi = P/L reproduces PD disaggregation; phi in {0, 1} reproduces
+colocation (one side empty).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    rid: str
+    arrival: float
+    prompt_len: int                 # P
+    decode_len: int                 # D (ground truth; scheduler sees predicted)
+    predicted_decode: Optional[int] = None
+
+    @property
+    def P(self) -> int:
+        return self.prompt_len
+
+    @property
+    def D(self) -> int:
+        return self.decode_len
+
+    @property
+    def D_pred(self) -> int:
+        return self.predicted_decode if self.predicted_decode is not None else self.decode_len
+
+    @property
+    def L(self) -> int:
+        return self.P + self.D_pred
+
+    @property
+    def true_L(self) -> int:
+        return self.P + self.D
+
+
+@dataclasses.dataclass
+class MicroRequest:
+    parent: Request
+    role: str                       # "alpha" | "beta"
+    start: int                      # token span [start, end)
+    end: int
+
+    @property
+    def rid(self) -> str:
+        return f"{self.parent.rid}/{self.role}"
+
+    @property
+    def n_tokens(self) -> int:
+        return self.end - self.start
+
+    @property
+    def prefill_tokens(self) -> int:
+        """Prompt tokens this micro-request must prefill."""
+        return max(0, min(self.end, self.parent.P) - min(self.start, self.parent.P))
+
+    @property
+    def decode_tokens(self) -> int:
+        """Output tokens this micro-request must decode."""
+        return max(0, self.end - max(self.start, self.parent.P))
+
+    @property
+    def needs_kv_handoff(self) -> bool:
+        """beta needs KV/state of tokens [0, start) produced by alpha."""
+        return self.role == "beta" and self.start > 0
+
+    @property
+    def handoff_tokens(self) -> int:
+        return self.start if self.role == "beta" else 0
+
+
+def split_request(r: Request, phi: float):
+    """Split at s = ceil(phi*L).  Returns (alpha|None, beta|None)."""
+    L = r.L
+    s = min(L, max(0, math.ceil(phi * L)))
+    alpha = MicroRequest(r, "alpha", 0, s) if s > 0 else None
+    beta = MicroRequest(r, "beta", s, L) if s < L else None
+    return alpha, beta

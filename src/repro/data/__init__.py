@@ -1,0 +1,3 @@
+from repro.data.workloads import (  # noqa: F401
+    WORKLOADS, WorkloadSpec, generate_trace, hybrid_trace, replay_trace,
+)

@@ -1,0 +1,1 @@
+from repro.engine.runner import InstanceEngine, BatchItem  # noqa: F401

@@ -1,0 +1,195 @@
+"""Engine-backed serving cluster: DynaServe's two-level scheduler driving
+REAL JAX engines (reduced models on CPU; the same code path a TPU
+deployment jits).
+
+This is the integration layer the end-to-end tests and the serve example
+exercise: micro-request splitting, per-instance batch composition, and
+chunk-wise KV/state handoff between instances all actually happen on
+arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costmodel import BatchCostModel, HardwareSpec, A100
+from repro.core.global_scheduler import GlobalScheduler, InstanceView
+from repro.core.predictor import QueuedWork
+from repro.core.request import MicroRequest, Request, split_request
+from repro.engine.runner import BatchItem, InstanceEngine
+from repro.engine.sampling import sample
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class LiveRequest:
+    req: Request
+    prompt: np.ndarray                 # (P,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    token_walltimes: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class LiveMicro:
+    lr: LiveRequest
+    mr: MicroRequest
+    slot: int
+    pos: int                            # next position to process
+    engine_id: int
+
+    @property
+    def is_prefill(self) -> bool:
+        return self.pos < self.lr.req.P
+
+    @property
+    def end(self) -> int:
+        return self.mr.end
+
+
+class ServingCluster:
+    """N unified instances + DynaServe APS, on real engines."""
+
+    def __init__(self, cfg: ModelConfig, params, n_instances: int = 2,
+                 n_slots: int = 8, max_len: int = 512,
+                 prefill_budget: int = 64, transfer_chunk: int = 32,
+                 split: bool = True, hw: HardwareSpec = A100):
+        self.cfg = cfg
+        self.engines = [InstanceEngine(cfg, params, n_slots, max_len)
+                        for _ in range(n_instances)]
+        self.cost = BatchCostModel(cfg, hw)
+        self.gs = GlobalScheduler(self.cost, margin_tokens=0)
+        self.prefill_budget = prefill_budget
+        self.transfer_chunk = transfer_chunk
+        self.split = split
+        self.queues: List[List[LiveMicro]] = [[] for _ in range(n_instances)]
+        self.pending_beta: Dict[str, LiveMicro] = {}
+        self.kv_bytes_moved = 0
+        self._iter = itertools.count()
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               rid: Optional[str] = None) -> LiveRequest:
+        rid = rid or f"req{next(self._iter)}"
+        r = Request(rid, time.time(), len(prompt), max_new_tokens)
+        lr = LiveRequest(r, np.asarray(prompt, np.int32), max_new_tokens)
+        if self.split and len(self.engines) >= 2:
+            views = [InstanceView(i, self._view(i))
+                     for i in range(len(self.engines))]
+            pl = self.gs.schedule(r, views)
+            alpha, beta = pl.alpha, pl.beta
+            ia, ib = pl.alpha_instance, pl.beta_instance
+        else:
+            alpha, beta = split_request(r, 1.0)
+            ia, ib = 0, None
+        if alpha is not None and alpha.n_tokens > 0:
+            slot = self.engines[ia].alloc(alpha.rid)
+            lm = LiveMicro(lr, alpha, slot, 0, ia)
+            self.queues[ia].append(lm)
+            if beta is not None and beta.n_tokens > 0:
+                bslot = self.engines[ib].alloc(beta.rid)
+                bm = LiveMicro(lr, beta, bslot, beta.start, ib)
+                self.pending_beta[alpha.rid] = bm
+        elif beta is not None:
+            slot = self.engines[ib].alloc(beta.rid)
+            self.queues[ib].append(LiveMicro(lr, beta, slot, 0, ib))
+        return lr
+
+    def _view(self, i: int) -> List[QueuedWork]:
+        out = []
+        for m in self.queues[i]:
+            pf = max(0, min(m.end, m.lr.req.P) - m.pos)
+            dc = max(0, m.end - max(m.pos, m.lr.req.P))
+            out.append(QueuedWork(m.mr.rid, pf, dc, m.pos))
+        return out
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduling iteration across all instances; returns the
+        number of work items executed."""
+        executed = 0
+        for eid, eng in enumerate(self.engines):
+            q = self.queues[eid]
+            if not q:
+                continue
+            items: List[BatchItem] = []
+            handled: List[LiveMicro] = []
+            budget = self.prefill_budget
+            for m in list(q):
+                if m.is_prefill:
+                    if budget <= 0:
+                        continue
+                    take = min(budget, m.lr.req.P - m.pos,
+                               m.end - m.pos)
+                    toks = m.lr.prompt[m.pos:m.pos + take]
+                    last_of_prompt = (m.pos + take) >= m.lr.req.P
+                    items.append(BatchItem(m.slot, toks, m.pos,
+                                           want_logits=last_of_prompt))
+                    handled.append((m, take))
+                    budget -= take
+                else:
+                    # decode step: feed the last generated token
+                    tok = (m.lr.generated[-1] if m.lr.generated
+                           else int(m.lr.prompt[-1]))
+                    items.append(BatchItem(
+                        m.slot, np.array([tok], np.int32), m.pos,
+                        want_logits=True))
+                    handled.append((m, 1))
+            if not items:
+                continue
+            out = eng.run_batch(items)
+            executed += len(items)
+            now = time.time()
+            for m, take in handled:
+                was_prefill = m.is_prefill
+                m.pos += take
+                if was_prefill:
+                    if m.slot in out:        # prompt fully consumed
+                        tok = sample(out[m.slot])
+                        m.lr.generated.append(tok)
+                        m.lr.token_walltimes.append(now)
+                else:
+                    tok = sample(out[m.slot])
+                    m.lr.generated.append(tok)
+                    m.lr.token_walltimes.append(now)
+                if m.pos >= min(m.end, m.lr.req.true_L - 1) or \
+                        len(m.lr.generated) >= m.lr.max_new_tokens:
+                    self._finish_micro(m)
+        return executed
+
+    # ------------------------------------------------------------------
+    def _finish_micro(self, m: LiveMicro) -> None:
+        q = self.queues[m.engine_id]
+        if m in q:
+            q.remove(m)
+        eng = self.engines[m.engine_id]
+        beta = self.pending_beta.pop(m.mr.rid, None)
+        if beta is not None and len(m.lr.generated) < m.lr.max_new_tokens:
+            # chunk-wise KV/state handoff to the beta instance
+            pieces = eng.export_state(m.slot, upto=m.pos,
+                                      chunk=self.transfer_chunk)
+            self.engines[beta.engine_id].import_state(beta.slot, pieces)
+            self.kv_bytes_moved += int(self.cost.kv_transfer_bytes(m.pos))
+            beta.pos = m.pos
+            self.queues[beta.engine_id].append(beta)
+        elif beta is not None:
+            self.engines[beta.engine_id].free(beta.slot)
+        eng.free(m.slot)
+
+    # ------------------------------------------------------------------
+    def run_until_done(self, reqs: Sequence[LiveRequest],
+                       max_iters: int = 10_000) -> None:
+        for _ in range(max_iters):
+            if all(len(r.generated) >= r.max_new_tokens for r in reqs):
+                break
+            if self.step() == 0:
+                if all(len(r.generated) >= r.max_new_tokens for r in reqs):
+                    break
+                raise RuntimeError("cluster stalled with pending work")
+        for r in reqs:
+            r.done = True

@@ -1,0 +1,273 @@
+"""Per-instance execution engine.
+
+One ``InstanceEngine`` is the runtime of one *unified GPU instance* in
+DynaServe terms: it owns a slot-pooled KV/state cache and executes the
+batches the local scheduler composes.  A batch is a set of (slot, token
+span) items — prefill chunks of any length and decode steps (length 1)
+run together in ONE padded forward call, which is exactly the paper's
+unified mixed batch.
+
+The engine deliberately runs real JAX compute so the end-to-end serving
+tests exercise the same code path the TPU deployment lowers; the cluster
+*simulator* (repro.sim) reuses only the cost model, not this engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_cache
+
+BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+
+def bucket_of(n: int) -> int:
+    for b in BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"chunk of {n} tokens exceeds max bucket {BUCKETS[-1]}")
+
+
+@dataclasses.dataclass
+class BatchItem:
+    slot: int
+    tokens: np.ndarray          # (t,) int32 token ids to feed
+    pos_offset: int             # absolute position of tokens[0]
+    want_logits: bool = False   # final chunk of prefill / decode step
+
+
+class InstanceEngine:
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
+                 max_len: int = 512, window_override: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.window_override = window_override
+        self.cache = init_cache(cfg, n_slots, max_len,
+                                window_override=window_override)
+        self.free_slots = list(range(n_slots))
+        self.slot_owner: Dict[int, str] = {}
+        self._step_fns: Dict[int, callable] = {}
+        # counters for tests/benchmarks
+        self.iterations = 0
+        self.tokens_processed = 0
+
+    # ---------------- slot management ----------------
+    def alloc(self, req_id: str) -> int:
+        slot = self.free_slots.pop(0)
+        self.slot_owner[slot] = req_id
+        return slot
+
+    def free(self, slot: int) -> None:
+        self.slot_owner.pop(slot, None)
+        self.free_slots.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free_slots)
+
+    # ---------------- jitted unified step ----------------
+    def _step_fn(self, T: int):
+        if T in self._step_fns:
+            return self._step_fns[T]
+        cfg, wo = self.cfg, self.window_override
+
+        @jax.jit
+        def step(params, cache, tokens, pos_offset, n_valid, active):
+            logits, new_cache, _ = forward(
+                params, cfg, tokens, cache=cache, pos_offset=pos_offset,
+                active=active, n_valid=n_valid, last_only=True,
+                window_override=wo)
+            return logits[:, 0], new_cache
+
+        self._step_fns[T] = step
+        return step
+
+    # ---------------- execution ----------------
+    def run_batch(self, items: Sequence[BatchItem]) -> Dict[int, np.ndarray]:
+        """Execute one unified mixed batch; returns {slot: last-token logits}
+        for items with want_logits."""
+        if not items:
+            return {}
+        T = bucket_of(max(len(it.tokens) for it in items))
+        B = self.n_slots
+        tokens = np.zeros((B, T), np.int32)
+        pos_off = np.zeros((B,), np.int32)
+        n_valid = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for it in items:
+            t = len(it.tokens)
+            tokens[it.slot, :t] = it.tokens
+            pos_off[it.slot] = it.pos_offset
+            n_valid[it.slot] = t
+            active[it.slot] = True
+        step = self._step_fn(T)
+        logits, self.cache = step(self.params, self.cache,
+                                  jnp.asarray(tokens), jnp.asarray(pos_off),
+                                  jnp.asarray(n_valid), jnp.asarray(active))
+        self.iterations += 1
+        self.tokens_processed += int(sum(len(it.tokens) for it in items))
+        logits = np.asarray(logits)
+        return {it.slot: logits[it.slot] for it in items if it.want_logits}
+
+    def run_frontend(self, slot: int, *, extra_embeds=None, frames=None,
+                     tokens: Optional[np.ndarray] = None, pos_offset: int = 0):
+        """Stub-frontend prefill for VLM/audio requests: embeds the patch /
+        frame embeddings (plus any leading text tokens) into the cache for
+        one slot.  Runs as a dedicated call because embeddings enter below
+        the token embedding layer."""
+        B = self.n_slots
+        cfg = self.cfg
+        n_extra = (extra_embeds.shape[0] if extra_embeds is not None else 0)
+        tok = np.zeros((B, max(1, 0 if tokens is None else len(tokens))), np.int32)
+        if tokens is not None and len(tokens):
+            tok[slot, :len(tokens)] = tokens
+            tvalid = len(tokens)
+        else:
+            tok = None
+            tvalid = 0
+        kw = {}
+        if extra_embeds is not None:
+            ee = np.zeros((B,) + extra_embeds.shape, np.float32)
+            ee[slot] = extra_embeds
+            kw["extra_embeds"] = jnp.asarray(ee)
+        if frames is not None:
+            fr = np.zeros((B,) + frames.shape, np.float32)
+            fr[slot] = frames
+            kw["frames"] = jnp.asarray(fr)
+        active = np.zeros((B,), bool)
+        active[slot] = True
+        total = n_extra + tvalid
+        n_valid = np.full((B,), total, np.int32)
+        logits, self.cache, _ = forward(
+            self.params, cfg, None if tok is None else jnp.asarray(tok),
+            cache=self.cache, pos_offset=jnp.full((B,), pos_offset, jnp.int32),
+            active=jnp.asarray(active), n_valid=jnp.asarray(n_valid),
+            last_only=True, window_override=self.window_override, **kw)
+        self.iterations += 1
+        self.tokens_processed += total
+        return np.asarray(logits[slot, 0])
+
+    # ---------------- micro-request state handoff ----------------
+    def export_state(self, slot: int, upto: int, chunk: int = 0) -> List[dict]:
+        """Extract the KV/state needed to resume this request elsewhere.
+
+        Attention KV for positions [0, upto) is split into ``chunk``-sized
+        pieces (chunk-based KV transfer, §4.3); recurrent state is O(1) and
+        ships as a single piece.
+        """
+        cfg = self.cfg
+        pieces: List[dict] = []
+        spans = ([(0, upto)] if not chunk else
+                 [(s, min(s + chunk, upto)) for s in range(0, upto, chunk)])
+        for lo, hi in spans:
+            piece = {"span": (lo, hi), "blocks": []}
+            for i, kind in enumerate(cfg.layer_pattern):
+                c = self.cache["blocks"][i]
+                if "k" in c and c["k"].shape[2] >= upto:
+                    piece["blocks"].append({
+                        "k": np.asarray(c["k"][:, slot, lo:hi]),
+                        "v": np.asarray(c["v"][:, slot, lo:hi]),
+                        "pos": np.asarray(c["pos"][:, slot, lo:hi]),
+                    })
+                else:
+                    # ring buffer (sliding window): bounded — ship whole
+                    # buffer with the final piece instead of spans
+                    piece["blocks"].append(None)
+            pieces.append(piece)
+        final = pieces[-1]
+        final["rings"] = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            c = self.cache["blocks"][i]
+            if "k" in c and c["k"].shape[2] < upto:
+                final["rings"].append(
+                    {k: np.asarray(v[:, slot]) for k, v in c.items()})
+            else:
+                final["rings"].append(None)
+        # recurrent / tail / cross state rides with the final piece
+        final["recurrent"] = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            c = self.cache["blocks"][i]
+            if "k" not in c:
+                final["recurrent"].append(
+                    {k: np.asarray(v[:, slot]) for k, v in c.items()})
+            else:
+                final["recurrent"].append(None)
+        if "tail" in self.cache:
+            final["tail"] = [
+                {k: np.asarray(v[slot]) for k, v in tc.items()}
+                for tc in self.cache["tail"]]
+        if "cross" in self.cache:
+            final["cross"] = {k: np.asarray(v[:, slot])
+                              for k, v in self.cache["cross"].items()}
+        return pieces
+
+    def import_state(self, slot: int, pieces: Sequence[dict]) -> None:
+        cache = self.cache
+        for piece in pieces:
+            lo, hi = piece["span"]
+            for i, bc in enumerate(piece["blocks"]):
+                if bc is None:
+                    continue
+                c = cache["blocks"][i]
+                c = {
+                    "k": c["k"].at[:, slot, lo:hi].set(jnp.asarray(bc["k"])),
+                    "v": c["v"].at[:, slot, lo:hi].set(jnp.asarray(bc["v"])),
+                    "pos": c["pos"].at[:, slot, lo:hi].set(jnp.asarray(bc["pos"])),
+                }
+                blocks = list(cache["blocks"])
+                blocks[i] = c
+                cache = dict(cache, blocks=tuple(blocks))
+            if piece.get("rings"):
+                for i, rc in enumerate(piece["rings"]):
+                    if rc is None:
+                        continue
+                    c = cache["blocks"][i]
+                    c = {k: c[k].at[:, slot].set(jnp.asarray(v))
+                         for k, v in rc.items()}
+                    blocks = list(cache["blocks"])
+                    blocks[i] = c
+                    cache = dict(cache, blocks=tuple(blocks))
+            if piece.get("recurrent"):
+                for i, rc in enumerate(piece["recurrent"]):
+                    if rc is None:
+                        continue
+                    c = cache["blocks"][i]
+                    c = {k: c[k].at[:, slot].set(jnp.asarray(v))
+                         for k, v in rc.items()}
+                    blocks = list(cache["blocks"])
+                    blocks[i] = c
+                    cache = dict(cache, blocks=tuple(blocks))
+            if piece.get("tail"):
+                new_tail = []
+                for tc_cur, tc_new in zip(cache["tail"], piece["tail"]):
+                    new_tail.append({k: tc_cur[k].at[slot].set(jnp.asarray(v))
+                                     for k, v in tc_new.items()})
+                cache = dict(cache, tail=tuple(new_tail))
+            if piece.get("cross"):
+                cache = dict(cache, cross={
+                    k: cache["cross"][k].at[:, slot].set(jnp.asarray(v))
+                    for k, v in piece["cross"].items()})
+        self.cache = cache
+
+    def state_bytes(self, upto: int) -> int:
+        """Bytes a handoff of ``upto`` tokens moves (for transfer modeling)."""
+        cfg = self.cfg
+        total = 0
+        per_tok = 2 * cfg.n_kv_heads * cfg.hd * jnp.dtype(cfg.dtype).itemsize
+        for kind in (list(cfg.layer_pattern) * cfg.n_groups)[: cfg.n_layers]:
+            if kind == "attn":
+                total += upto * per_tok
+            elif kind == "local_attn":
+                total += min(upto, cfg.window or upto) * per_tok
+            elif kind == "ssd":
+                total += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+            elif kind == "rglru":
+                total += cfg.lru_dim * 4
+        return total

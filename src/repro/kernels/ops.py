@@ -1,0 +1,63 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode;
+on TPU the same call sites compile to Mosaic.  Inputs are padded to tile
+boundaries here so callers can use ragged sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels import ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def chunked_prefill_attention_op(q, k, v, offsets, *, bq: int = 128,
+                                 bk: int = 128, interpret: bool | None = None):
+    """Public op: pads Tq/S to tile multiples, runs the kernel, un-pads."""
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Tq, H, hd = q.shape
+    bq_eff = min(bq, max(8, Tq))
+    bk_eff = min(bk, max(8, k.shape[1]))
+    qp = _pad_to(q, 1, bq_eff)
+    kp = _pad_to(k, 1, bk_eff)
+    vp = _pad_to(v, 1, bk_eff)
+    out = chunked_prefill_attention(qp, kp, vp, offsets.astype(jnp.int32),
+                                    bq=bq_eff, bk=bk_eff, interpret=interpret)
+    return out[:, :Tq]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+                              interpret: bool | None = None):
+    if interpret is None:
+        interpret = _on_cpu()
+    return paged_decode_attention(q, k_pages, v_pages,
+                                  block_tables.astype(jnp.int32),
+                                  lengths.astype(jnp.int32),
+                                  interpret=interpret)
+
+
+# re-export oracles for tests
+chunked_prefill_attention_ref = ref.chunked_prefill_attention_ref
+paged_decode_attention_ref = ref.paged_decode_attention_ref

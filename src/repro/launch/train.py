@@ -1,0 +1,52 @@
+"""Training launcher.
+
+Reduced configs run for real on CPU (``--smoke``); full configs lower the
+production-mesh train step (use launch.dryrun for the sharded path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch chatglm3-6b --smoke \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import token_batches
+from repro.models.model import init_params
+from repro.training.optimizer import AdamWConfig
+from repro.training.train import train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                      total_steps=args.steps)
+    res = train_loop(cfg, params, token_batches(cfg, args.batch, args.seq),
+                     opt, steps=args.steps,
+                     checkpoint_dir=args.checkpoint_dir,
+                     checkpoint_every=args.checkpoint_every)
+    for h in res["history"]:
+        print(json.dumps(h))
+    first, last = res["history"][0]["loss"], res["history"][-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

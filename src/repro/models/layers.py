@@ -1,0 +1,231 @@
+"""Reusable layers: norms, RoPE variants, MLPs, MoE dispatch.
+
+Everything is functional: ``init_*`` returns a param pytree (real arrays or
+ShapeDtypeStructs when ``abstract=True``); ``*_fwd`` applies it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# param construction
+# --------------------------------------------------------------------------
+class ParamFactory:
+    """Creates params either as initialized arrays or ShapeDtypeStructs."""
+
+    def __init__(self, key: Optional[jax.Array], dtype, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def dense(self, *shape, scale: Optional[float] = None):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        if scale is None:
+            scale = 1.0 / np.sqrt(shape[0] if len(shape) > 1 else shape[0])
+        return (jax.random.normal(self._next(), shape, jnp.float32) * scale).astype(self.dtype)
+
+    def zeros(self, *shape):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, *shape):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jnp.ones(shape, self.dtype)
+
+    def uniform(self, *shape, lo=0.0, hi=1.0):
+        if self.abstract:
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        return jax.random.uniform(self._next(), shape, jnp.float32, lo, hi).astype(self.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_norm(pf: ParamFactory, cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": pf.ones(dim), "bias": pf.zeros(dim)}
+    return {"scale": pf.ones(dim)}
+
+
+def norm_fwd(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(p, x, eps: float = 1e-6):
+    """Per-head q/k rmsnorm (qwen3). x: (..., hd)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# position embeddings
+# --------------------------------------------------------------------------
+def rope_tables(positions: jax.Array, head_dim: int, theta: float,
+                fraction: float = 1.0):
+    """positions: (..., T) int32 -> (sin, cos) of shape (..., T, rot/2)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array):
+    """x: (B, T, H, hd); sin/cos: (B, T, r/2) or (T, r/2)."""
+    rot2 = sin.shape[-1]
+    xr, xp = x[..., : 2 * rot2], x[..., 2 * rot2:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    if sin.ndim == 2:
+        s, c = sin[None, :, None, :], cos[None, :, None, :]
+    else:
+        s, c = sin[:, :, None, :], cos[:, :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_table(length: int, dim: int):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    tab = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(tab, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(pf: ParamFactory, cfg: ModelConfig):
+    dm, ff = cfg.d_model, cfg.d_ff
+    if cfg.moe_experts:
+        return init_moe(pf, cfg)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {"wi": pf.dense(dm, ff), "wg": pf.dense(dm, ff), "wo": pf.dense(ff, dm)}
+    if cfg.mlp in ("squared_relu", "gelu"):
+        return {"wi": pf.dense(dm, ff), "wo": pf.dense(ff, dm)}
+    if cfg.mlp == "none":
+        return {}
+    raise ValueError(cfg.mlp)
+
+
+def mlp_fwd(p, x, cfg: ModelConfig):
+    """Returns (y, aux_loss). aux_loss is the MoE load-balance term (0 for
+    dense MLPs)."""
+    if cfg.moe_experts:
+        return moe_fwd(p, x, cfg)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+        return h @ p["wo"], jnp.float32(0.0)
+    if cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
+        return h @ p["wo"], jnp.float32(0.0)
+    if cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+        return h @ p["wo"], jnp.float32(0.0)
+    if cfg.mlp == "gelu":
+        return jax.nn.gelu(x @ p["wi"]) @ p["wo"], jnp.float32(0.0)
+    raise ValueError(cfg.mlp)
+
+
+# --------------------------------------------------------------------------
+# MoE (GShard-style top-k dispatch with capacity; active-FLOPs faithful)
+# --------------------------------------------------------------------------
+def init_moe(pf: ParamFactory, cfg: ModelConfig):
+    dm, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.moe_experts
+    return {
+        "router": pf.dense(dm, e, scale=0.02),
+        "wi": pf.dense(e, dm, ff),
+        "wg": pf.dense(e, dm, ff),
+        "wo": pf.dense(e, ff, dm),
+    }
+
+
+def moe_fwd(p, x, cfg: ModelConfig, capacity_factor: Optional[float] = None):
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    """x: (B, T, dm). Top-k routing with per-expert capacity buffers so the
+    compiled FLOPs reflect *active* experts only (E·C·... with
+    C ≈ T·k/E·cf), matching how production MoE engines dispatch."""
+    B, T, dm = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    S = B * T
+    xf = x.reshape(S, dm)
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)               # (S, K)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(S * K / E * capacity_factor))
+    cap = max(cap, 4)
+    # Position of each (token, k) slot within its expert, via sort-based
+    # ranking.  (A previous version ranked with a (S*K, E) one-hot cumsum;
+    # XLA lowers that cumsum as a quadratically-costed reduce-window —
+    # ~1100 TFLOP/layer at 1M tokens, 45x the whole MoE FFN.  See
+    # EXPERIMENTS.md §Perf iteration B1.)
+    n = S * K
+    flat_e = gate_idx.reshape(n)
+    order = jnp.argsort(flat_e, stable=True)                 # groups by expert
+    idx = jnp.arange(n, dtype=jnp.int32)
+    seg_start = jnp.where(
+        jnp.concatenate([jnp.ones(1, bool),
+                         flat_e[order][1:] != flat_e[order][:-1]]),
+        idx, 0)
+    seg_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    pos_sorted = idx - seg_start                             # rank in expert
+    pos_flat = jnp.zeros(n, jnp.int32).at[order].set(pos_sorted)
+    pos_in_e = pos_flat.reshape(S, K)
+    keep = pos_in_e < cap
+    gate_w = gate_w * keep.astype(gate_w.dtype)
+
+    # dispatch: (E, cap, dm)
+    buf = jnp.zeros((E, cap, dm), x.dtype)
+    tok_ids = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K))
+    e_idx = jnp.where(keep, gate_idx, E - 1)
+    c_idx = jnp.clip(pos_in_e, 0, cap - 1)
+    buf = buf.at[e_idx, c_idx].add(
+        xf[tok_ids] * keep[..., None].astype(x.dtype), mode="drop")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])           # (E, cap, dm)
+
+    # combine
+    gathered = out_e[e_idx, c_idx]                            # (S, K, dm)
+    yf = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=1)
+    aux = moe_load_balance_loss(probs, gate_idx, E, K)
+    return yf.reshape(B, T, dm), aux
+
+
+def moe_load_balance_loss(probs, gate_idx, E, K):
+    """Switch-style load-balance aux loss."""
+    S = probs.shape[0]
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,186 @@
+"""Serving policies: the paper's DynaServe plus both baselines.
+
+All three run on the identical simulator/instance substrate; only the
+placement + batching strategy differs — mirroring the paper's setup where
+all systems are vLLM-based.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.costmodel import BatchCostModel
+from repro.core.global_scheduler import GlobalScheduler, InstanceView
+from repro.core.kv_transfer import monolithic_exposed, plan_chunked_transfer
+from repro.core.local_scheduler import LocalScheduler
+from repro.core.predictor import QueuedWork
+from repro.core.request import MicroRequest, Request, split_request
+
+
+class BasePolicy:
+    last_overhead = 0.0
+
+    def role_of(self, iid: int, n: int) -> str:
+        return "unified"
+
+    def make_local_scheduler(self, iid: int, cost: BatchCostModel,
+                             slo: float) -> LocalScheduler:
+        raise NotImplementedError
+
+    def place(self, r: Request, sim, now: float):
+        raise NotImplementedError
+
+    def on_micro_finished(self, m, sim, now: float) -> None:
+        pass
+
+    # helpers ------------------------------------------------------------
+    @staticmethod
+    def _queued_view(inst) -> List[QueuedWork]:
+        out = []
+        for m in inst.prefill_q:
+            out.append(QueuedWork(m.rid, m.prefill_remaining,
+                                  m.decode_remaining, m.pos))
+        for m in inst.decode_q:
+            out.append(QueuedWork(m.rid, 0, m.decode_remaining, m.pos))
+        return out
+
+
+# ==========================================================================
+# PD colocation (+ chunked prefill), vLLM default
+# ==========================================================================
+class ColocationPolicy(BasePolicy):
+    def __init__(self, chunk: int = 2048, slo_aware: bool = False):
+        self.chunk = chunk
+        self.slo_aware = slo_aware
+        self._rr = 0
+
+    def make_local_scheduler(self, iid, cost, slo):
+        return LocalScheduler(cost, slo, slo_aware=self.slo_aware,
+                              static_chunk=self.chunk)
+
+    def place(self, r: Request, sim, now: float):
+        from repro.sim.simulator import SimMicro
+        iid = self._rr % len(sim.instances)
+        self._rr += 1
+        mr = MicroRequest(r, "alpha", 0, r.true_L)
+        return [(iid, SimMicro(mr, r.P, r.D, 0))]
+
+
+# ==========================================================================
+# PD disaggregation (DistServe/vLLM-disagg style)
+# ==========================================================================
+class DisaggregationPolicy(BasePolicy):
+    """First half of the pool prefills, second half decodes; the full KV
+    ships at the PD boundary (monolithic => fully exposed)."""
+
+    def __init__(self, prefill_chunk: int = 8192):
+        self.prefill_chunk = prefill_chunk
+        self._rr_p = 0
+        self._rr_d = 0
+        self._pending_beta = {}
+
+    def role_of(self, iid: int, n: int) -> str:
+        return "prefill" if iid < n // 2 else "decode"
+
+    def make_local_scheduler(self, iid, cost, slo):
+        return LocalScheduler(cost, slo, slo_aware=False,
+                              static_chunk=self.prefill_chunk)
+
+    def place(self, r: Request, sim, now: float):
+        from repro.sim.simulator import SimMicro
+        n = len(sim.instances)
+        n_p = max(1, n // 2)
+        ip = self._rr_p % n_p
+        idd = n_p + (self._rr_d % max(1, n - n_p))
+        self._rr_p += 1
+        self._rr_d += 1
+        alpha, beta = split_request(r, r.P / r.true_L)
+        # use TRUE decode length for execution; prediction only guides split
+        a = SimMicro(alpha, alpha.prefill_tokens, 0, 0)
+        b = SimMicro(beta, 0, r.D, r.P, ready=float("inf"))
+        self._pending_beta[alpha.rid] = b
+        return [(ip, a), (idd, b)]
+
+    def on_micro_finished(self, m, sim, now: float) -> None:
+        b = self._pending_beta.pop(m.rid, None)
+        if b is not None:
+            exposed = monolithic_exposed(sim.cost, m.mr.end)
+            nbytes = sim.cost.kv_transfer_bytes(m.mr.end)
+            sim.release_beta(b, now + exposed, exposed, nbytes)
+
+
+# ==========================================================================
+# DynaServe (paper)
+# ==========================================================================
+class DynaServePolicy(BasePolicy):
+    def __init__(self, cost: BatchCostModel, slo: float = 0.100,
+                 transfer_chunk: int = 512, max_probes: int = 6,
+                 slo_aware_batching: bool = True,
+                 split_mode: str = "dynamic"):
+        """split_mode ablations: "dynamic" = Algorithm 1 binary search
+        (the paper); "static" = fixed phi = P/L on unified instances
+        (disaggregation-shaped split but elastic placement); "none" =
+        never split (colocation-shaped placement with SLO batching)."""
+        self.gs = GlobalScheduler(cost, slo, max_probes=max_probes)
+        self.transfer_chunk = transfer_chunk
+        self.slo_aware_batching = slo_aware_batching
+        self.split_mode = split_mode
+        self._rr = 0
+        self._pending_beta = {}
+
+    def make_local_scheduler(self, iid, cost, slo):
+        if self.slo_aware_batching:
+            return LocalScheduler(cost, slo, slo_aware=True)
+        # ablation arm for Fig 11 (no SLO-aware batching)
+        return LocalScheduler(cost, slo, slo_aware=False, static_chunk=2048)
+
+    def place(self, r: Request, sim, now: float):
+        from repro.sim.simulator import SimMicro
+        if self.split_mode == "none":
+            iid = self._rr % len(sim.instances)
+            self._rr += 1
+            mr = MicroRequest(r, "alpha", 0, r.true_L)
+            return [(iid, SimMicro(mr, r.P, r.D, 0))]
+        if self.split_mode == "static":
+            n = len(sim.instances)
+            ia, ib = self._rr % n, (self._rr + 1) % n
+            self._rr += 1
+            alpha, beta = split_request(r, r.P / r.true_L)
+            a = SimMicro(alpha, alpha.prefill_tokens, 0, 0)
+            b = SimMicro(beta, 0, r.D, r.P, ready=float("inf"))
+            self._pending_beta[alpha.rid] = b
+            return [(ia, a), (ib, b)]
+        views = [InstanceView(i.iid, self._queued_view(i))
+                 for i in sim.instances]
+        pl = self.gs.schedule(r, views)
+        self.last_overhead = pl.overhead_s
+        out = []
+        # clamp the *executed* token span to the true length (the predictor
+        # margin only affects the split decision, not real work)
+        true_L = r.true_L
+        if pl.alpha is not None:
+            a_end = min(pl.alpha.end, true_L)
+            if a_end > 0:
+                mr = MicroRequest(r, "alpha", 0, a_end)
+                sm = SimMicro(mr, mr.prefill_tokens, mr.decode_tokens, 0)
+                out.append((pl.alpha_instance, sm))
+        if pl.beta is not None and pl.beta.start < true_L:
+            mr = MicroRequest(r, "beta", pl.beta.start, true_L)
+            sm = SimMicro(mr, mr.prefill_tokens, mr.decode_tokens, mr.start)
+            if out:      # depends on alpha's KV handoff
+                sm.ready = float("inf")
+                self._pending_beta[out[0][1].rid] = sm
+            out.append((pl.beta_instance, sm))
+        if not out:      # degenerate: empty request
+            mr = MicroRequest(r, "alpha", 0, true_L)
+            out.append((pl.alpha_instance or 0,
+                        SimMicro(mr, mr.prefill_tokens, mr.decode_tokens, 0)))
+        return out
+
+    def on_micro_finished(self, m, sim, now: float) -> None:
+        b = self._pending_beta.pop(m.rid, None)
+        if b is not None:
+            plan = plan_chunked_transfer(sim.cost, m.mr.end,
+                                         self.transfer_chunk)
+            sim.release_beta(b, now + plan.exposed, plan.exposed,
+                             plan.total_bytes)

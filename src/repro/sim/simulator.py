@@ -1,0 +1,305 @@
+"""Discrete-event cluster simulator.
+
+Replays a request trace against N instances whose per-batch latency comes
+from the analytic ``BatchCostModel`` — the same model the global
+scheduler's predictor uses, so the paper's two-level scheduling runs
+unmodified on top.  Reproduces the paper's evaluation (goodput vs QPS,
+serving capacity, SLO attainment, replay) without GPUs; the *real* JAX
+engine (repro.engine) is exercised by the end-to-end integration tests
+instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import BatchCostModel, WorkItem
+from repro.core.local_scheduler import (
+    BatchPlan, DecodeWork, LocalScheduler, PrefillWork,
+)
+from repro.core.request import MicroRequest, Request
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_instances: int = 2
+    slo: float = 0.100
+    max_sim_time: float = 10_000.0
+    warmup: float = 5.0
+    hbm_bytes: float = 80e9        # A100-80G, for utilization accounting
+    record_util: bool = False
+
+
+@dataclasses.dataclass
+class SimMicro:
+    """Runtime state of one micro-request on an instance."""
+    mr: MicroRequest
+    prefill_remaining: int
+    decode_remaining: int
+    pos: int                       # next absolute token position
+    ready: float = 0.0
+    iid: int = -1
+
+    @property
+    def rid(self) -> str:
+        return self.mr.rid
+
+
+class SimInstance:
+    def __init__(self, iid: int, scheduler: LocalScheduler, role: str = "unified"):
+        self.iid = iid
+        self.scheduler = scheduler
+        self.role = role           # unified | prefill | decode
+        self.prefill_q: List[SimMicro] = []
+        self.decode_q: List[SimMicro] = []
+        self.busy = False
+        # accounting
+        self.busy_time = 0.0
+        self.flops_done = 0.0
+        self.bytes_done = 0.0
+        self.kv_tokens_resident = 0
+
+    def has_work(self, now: float) -> bool:
+        return any(m.ready <= now for m in self.prefill_q) or \
+            any(m.ready <= now for m in self.decode_q)
+
+
+@dataclasses.dataclass
+class ReqState:
+    req: Request
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None
+    done_at: Optional[float] = None
+    micro_done: int = 0
+    n_micro: int = 1
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    duration: float
+    completed: int
+    offered: int
+    tokens_total: int
+    tokens_in_slo: int
+    tbts: np.ndarray
+    ttfts: np.ndarray
+    req_attained: float           # fraction of requests with max TBT <= SLO
+    scheduling_overheads: np.ndarray
+    per_instance_busy: List[float]
+    per_instance_mfu: List[float]
+    per_instance_hbm: List[float]
+    transfer_exposed_total: float
+    transfer_bytes_total: float
+    goodput_window: Optional[List[Tuple[float, float]]] = None
+
+    @property
+    def goodput(self) -> float:
+        return self.tokens_in_slo / self.duration
+
+    @property
+    def throughput_tokens(self) -> float:
+        return self.tokens_total / self.duration
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.completed / self.duration
+
+    @property
+    def token_attainment(self) -> float:
+        return self.tokens_in_slo / max(1, self.tokens_total)
+
+    def p99_tbt(self) -> float:
+        return float(np.percentile(self.tbts, 99)) if len(self.tbts) else 0.0
+
+    def p50_tbt(self) -> float:
+        return float(np.percentile(self.tbts, 50)) if len(self.tbts) else 0.0
+
+
+class ClusterSim:
+    def __init__(self, cost: BatchCostModel, policy, sim_cfg: SimConfig):
+        self.cost = cost
+        self.policy = policy
+        self.cfg = sim_cfg
+        self.instances = [
+            SimInstance(i, policy.make_local_scheduler(i, cost, sim_cfg.slo),
+                        policy.role_of(i, sim_cfg.n_instances))
+            for i in range(sim_cfg.n_instances)
+        ]
+        self.req_states: Dict[str, ReqState] = {}
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.transfer_exposed = 0.0
+        self.transfer_bytes = 0.0
+        self.sched_overheads: List[float] = []
+
+    # ---------------- event plumbing ----------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+
+    # ---------------- public API ----------------
+    def run(self, requests: Sequence[Request]) -> SimMetrics:
+        for r in requests:
+            self._push(r.arrival, "arrival", r)
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > self.cfg.max_sim_time:
+                break
+            self.now = t
+            if kind == "arrival":
+                self._on_arrival(payload)
+            elif kind == "batch_done":
+                self._on_batch_done(payload)
+            elif kind == "kick":
+                self._maybe_start_batch(self.instances[payload])
+        return self._metrics(requests)
+
+    # ---------------- arrival ----------------
+    def _on_arrival(self, r: Request) -> None:
+        placements = self.policy.place(r, self, self.now)
+        st = ReqState(r, n_micro=len(placements))
+        self.req_states[r.rid] = st
+        if hasattr(self.policy, "last_overhead"):
+            self.sched_overheads.append(self.policy.last_overhead)
+        for inst_id, sm in placements:
+            sm.iid = inst_id
+            inst = self.instances[inst_id]
+            if sm.prefill_remaining > 0:
+                inst.prefill_q.append(sm)
+            elif sm.decode_remaining > 0:
+                inst.decode_q.append(sm)
+            self._maybe_start_batch(inst)
+
+    # ---------------- batching ----------------
+    def _maybe_start_batch(self, inst: SimInstance) -> None:
+        if inst.busy or not inst.has_work(self.now):
+            return
+        pf = [m for m in inst.prefill_q if m.ready <= self.now]
+        dc = [m for m in inst.decode_q if m.ready <= self.now]
+        if inst.role == "prefill":
+            dc = []
+        if inst.role == "decode":
+            pf = []
+        pworks = [PrefillWork(m.rid, m.prefill_remaining, m.pos) for m in pf]
+        dworks = [DecodeWork(m.rid, m.pos) for m in dc]
+        plan = inst.scheduler.next_batch(pworks, dworks)
+        if not plan.decodes and not plan.prefills:
+            return
+        # map back to SimMicro
+        by_rid = {m.rid: m for m in pf + dc}
+        grants = [(by_rid[w.rid], g) for w, g in plan.prefills]
+        decs = [by_rid[w.rid] for w in plan.decodes]
+        items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
+                 [WorkItem("decode", 1, m.pos) for m in decs])
+        lat = self.cost.latency(items)
+        inst.busy = True
+        inst.busy_time += lat
+        inst.flops_done += self.cost.flops(items)
+        inst.bytes_done += self.cost.bytes_moved(items)
+        self._push(self.now + lat, "batch_done",
+                   (inst.iid, grants, decs, plan, lat))
+
+    def _on_batch_done(self, payload) -> None:
+        iid, grants, decs, plan, lat = payload
+        inst = self.instances[iid]
+        inst.busy = False
+        inst.scheduler.record(plan, lat)
+        # prefill progress
+        for m, g in grants:
+            m.prefill_remaining -= g
+            m.pos += g
+            if m.prefill_remaining <= 0:
+                inst.prefill_q.remove(m)
+                st = self.req_states[m.mr.parent.rid]
+                # the forward pass that consumed the last prompt token
+                # emitted the first output token
+                if m.pos >= m.mr.parent.P and st.ttft is None:
+                    st.ttft = self.now - m.mr.parent.arrival
+                if m.decode_remaining > 0:
+                    inst.decode_q.append(m)
+                else:
+                    self._micro_finished(m)
+        # decode progress: every decode in the batch emitted one token
+        for m in decs:
+            m.decode_remaining -= 1
+            m.pos += 1
+            st = self.req_states[m.mr.parent.rid]
+            st.token_times.append(self.now)
+            if m.decode_remaining <= 0:
+                inst.decode_q.remove(m)
+                self._micro_finished(m)
+        self._maybe_start_batch(inst)
+
+    # ---------------- micro-request lifecycle ----------------
+    def _micro_finished(self, m: SimMicro) -> None:
+        st = self.req_states[m.mr.parent.rid]
+        st.micro_done += 1
+        self.policy.on_micro_finished(m, self, self.now)
+        if st.micro_done >= st.n_micro:
+            st.done_at = self.now
+
+    def release_beta(self, beta: SimMicro, ready: float,
+                     exposed: float, nbytes: float) -> None:
+        """Called by the policy when alpha completes: beta becomes
+        runnable after the (possibly chunk-overlapped) KV handoff."""
+        self.transfer_exposed += exposed
+        self.transfer_bytes += nbytes
+        beta.ready = ready
+        inst = self.instances[beta.iid]
+        self._push(ready, "kick", beta.iid)
+
+    # ---------------- metrics ----------------
+    def _metrics(self, requests: Sequence[Request]) -> SimMetrics:
+        slo = self.cfg.slo
+        tbts: List[float] = []
+        ttfts: List[float] = []
+        tok_total = 0
+        tok_in = 0
+        req_ok = 0
+        completed = 0
+        t_end = max((st.done_at or self.now) for st in self.req_states.values()) \
+            if self.req_states else self.now
+        duration = max(t_end, 1e-9)
+        for st in self.req_states.values():
+            if st.done_at is None:
+                continue
+            completed += 1
+            if st.ttft is not None:
+                ttfts.append(st.ttft)
+            ts = st.token_times
+            gaps = [b - a for a, b in zip(ts, ts[1:])]
+            tbts.extend(gaps)
+            tok_total += len(ts)
+            ok = sum(1 for g in gaps if g <= slo) + (1 if ts else 0)
+            tok_in += ok
+            if all(g <= slo for g in gaps):
+                req_ok += 1
+        mfu, hbm, busy = [], [], []
+        for inst in self.instances:
+            mfu.append(inst.flops_done / max(duration, 1e-9) / self.cost.hw.peak_flops)
+            hbm.append(min(1.0, (self.cost.weight_bytes +
+                                 inst.kv_tokens_resident * self.cost.kv_bytes_per_tok)
+                           / self.cfg.hbm_bytes))
+            busy.append(inst.busy_time / max(duration, 1e-9))
+        return SimMetrics(
+            duration=duration,
+            completed=completed,
+            offered=len(requests),
+            tokens_total=tok_total,
+            tokens_in_slo=tok_in,
+            tbts=np.asarray(tbts),
+            ttfts=np.asarray(ttfts),
+            req_attained=req_ok / max(1, completed),
+            scheduling_overheads=np.asarray(self.sched_overheads),
+            per_instance_busy=busy,
+            per_instance_mfu=mfu,
+            per_instance_hbm=hbm,
+            transfer_exposed_total=self.transfer_exposed,
+            transfer_bytes_total=self.transfer_bytes,
+        )

@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, cosine_lr  # noqa: F401
+from repro.training.train import make_train_step, train_loop  # noqa: F401

@@ -1,0 +1,55 @@
+"""Flat-npz checkpointing with path-keyed leaves (no orbax offline)."""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        leaves[key] = np.asarray(leaf)
+    return leaves
+
+
+def save_checkpoint(directory: str, params, opt_state, step: int) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    blob = {f"p{k}": v for k, v in _flatten(params).items()}
+    blob.update({f"o{k}": v for k, v in _flatten(opt_state).items()})
+    blob["__step__"] = np.asarray(step)
+    with open(tmp, "wb") as f:          # np.savez appends .npz to bare names
+        np.savez(f, **blob)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_checkpoint(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(f for f in os.listdir(directory)
+                   if f.startswith("ckpt_") and f.endswith(".npz"))
+    return os.path.join(directory, cands[-1]) if cands else None
+
+
+def load_checkpoint(path: str, params_template, opt_template) -> Tuple:
+    """Restore into the given pytree templates (shape/dtype validated)."""
+    blob = np.load(path)
+    step = int(blob["__step__"])
+
+    def restore(prefix, template):
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path_k, leaf in leaves_p:
+            key = prefix + jax.tree_util.keystr(path_k)
+            arr = blob[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return restore("p", params_template), restore("o", opt_template), step

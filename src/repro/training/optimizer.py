@@ -1,0 +1,88 @@
+"""AdamW with decoupled weight decay + cosine schedule (hand-rolled; no
+optax in this environment)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig(), abstract: bool = False):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def zeros_like(x):
+        if abstract or isinstance(x, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(x.shape, mdt)
+        return jnp.zeros(x.shape, mdt)
+
+    step = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+            else jnp.zeros((), jnp.int32))
+    return {
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+        "step": step,
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig = AdamWConfig()):
+    step = opt_state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * jnp.square(g)
+        mh = m32 / (1 - cfg.b1 ** step)
+        vh = v32 / (1 - cfg.b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        a, b, c = upd(g, m, v, p)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    params = jax.tree.unflatten(treedef, new_p)
+    new_state = {
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    return params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,82 @@
+"""Training step factory + loop.
+
+``make_train_step`` builds the jitted (params, opt_state, batch) ->
+(params, opt_state, metrics) function with optional gradient-accumulation
+microbatching (the memory knob that lets the ≥300B assigned archs fit the
+v5e mesh) and rematerialized block scans (see models.model ``remat``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import loss_fn
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    num_microbatches: int = 1, remat: bool = True,
+                    unroll: bool = False):
+    def compute_grads(params, batch):
+        lf = functools.partial(loss_fn, cfg=cfg)
+
+        def wrapped(p, b):
+            return loss_fn(p, cfg, b, remat=remat, unroll=unroll)
+
+        if num_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                wrapped, has_aux=True)(params, batch)
+            return loss, grads
+
+        def mb_slice(b, i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // num_microbatches),
+                    x.shape[0] // num_microbatches, axis=0), b)
+
+        def body(carry, i):
+            acc_loss, acc_grads = carry
+            (loss, _), grads = jax.value_and_grad(
+                wrapped, has_aux=True)(params, mb_slice(batch, i))
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_loss + loss, acc_grads), None
+
+        zero = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.float32(0.0), zero), jnp.arange(num_microbatches))
+        inv = 1.0 / num_microbatches
+        grads = jax.tree.map(lambda g: (g * inv).astype(jnp.float32), grads)
+        return loss * inv, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        params, opt_state, om = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, params, batches, opt_cfg=AdamWConfig(),
+               steps: int = 100, log_every: int = 10,
+               checkpoint_dir: Optional[str] = None,
+               checkpoint_every: int = 0) -> Dict:
+    from repro.training.checkpoint import save_checkpoint
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    opt_state = adamw_init(params, opt_cfg)
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(batches)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            history.append({"step": i, "loss": float(m["loss"]),
+                            "lr": float(m["lr"]),
+                            "elapsed": time.time() - t0})
+        if checkpoint_dir and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, params, opt_state, i + 1)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,7 @@
+"""Shared utilities."""
+from repro.utils.sharding import (  # noqa: F401
+    best_divisible_axes,
+    spec_for,
+    named_sharding,
+)
+from repro.utils.trees import tree_bytes, tree_param_count  # noqa: F401

@@ -1,0 +1,63 @@
+"""Sharding helpers: build PartitionSpecs that only use mesh axes that
+actually divide the tensor dimension (GQA kv_heads=2 cannot shard over a
+16-way model axis; we silently drop the axis and replicate instead)."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisNames = Union[None, str, Tuple[str, ...]]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def best_divisible_axes(mesh: Mesh, axes: AxisNames, dim: int) -> AxisNames:
+    """Return the longest prefix of ``axes`` whose product divides ``dim``."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    picked = []
+    prod = 1
+    for a in axes:
+        nxt = prod * _axis_size(mesh, a)
+        if dim % nxt == 0:
+            picked.append(a)
+            prod = nxt
+        else:
+            break
+    if not picked:
+        return None
+    return picked[0] if len(picked) == 1 else tuple(picked)
+
+
+def spec_for(mesh: Mesh, dims: Sequence[Tuple[int, AxisNames]]) -> P:
+    """Build a PartitionSpec for a tensor given (dim_size, desired_axes)
+    per dimension, dropping non-divisible axes."""
+    entries = []
+    used: set = set()
+    for dim, axes in dims:
+        ax = best_divisible_axes(mesh, axes, dim)
+        # an axis may appear at most once in a spec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else ax
+            if any(a in used for a in flat):
+                ax = None
+            else:
+                used.update(flat)
+        entries.append(ax)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(mesh: Mesh, dims: Sequence[Tuple[int, AxisNames]]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(mesh, dims))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,18 @@
+"""Pytree helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _size_bytes(x) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+def tree_bytes(tree) -> int:
+    return sum(_size_bytes(x) for x in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src layout without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see ONE device (the dry-run subprocess sets its own flags).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

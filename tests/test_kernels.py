@@ -1,0 +1,98 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp
+oracles in kernels/ref.py (interpret=True executes the kernel body on
+CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (
+    chunked_prefill_attention_op, chunked_prefill_attention_ref,
+    paged_decode_attention_op, paged_decode_attention_ref,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Tq,S,H,KV,hd,bq,bk", [
+    (1, 8, 32, 4, 4, 32, 8, 8),        # MHA
+    (2, 24, 64, 8, 2, 64, 8, 16),      # GQA, ragged chunk
+    (2, 16, 48, 6, 1, 128, 16, 16),    # MQA, wide head
+    (1, 33, 70, 4, 2, 64, 16, 32),     # non-multiple sizes (wrapper pads)
+])
+def test_chunked_prefill_vs_ref(dtype, B, Tq, S, H, KV, hd, bq, bk):
+    q = _rand((B, Tq, H, hd), dtype)
+    k = _rand((B, S, KV, hd), dtype)
+    v = _rand((B, S, KV, hd), dtype)
+    off = jnp.asarray(RNG.integers(0, S - Tq, B), jnp.int32)
+    out = chunked_prefill_attention_op(q, k, v, off, bq=bq, bk=bk,
+                                       interpret=True)
+    exp = chunked_prefill_attention_ref(q, k, v, off)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_chunked_prefill_zero_offset_is_plain_causal():
+    """offsets == 0 must equal vanilla causal flash attention."""
+    B, T, H, hd = 2, 32, 4, 64
+    q = _rand((B, T, H, hd), jnp.float32)
+    k = _rand((B, T, H, hd), jnp.float32)
+    v = _rand((B, T, H, hd), jnp.float32)
+    out = chunked_prefill_attention_op(q, k, v, jnp.zeros(B, jnp.int32),
+                                       bq=8, bk=8, interpret=True)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    exp = jnp.einsum("bhts,bshd->bthd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,hd,page,ppseq", [
+    (2, 8, 2, 64, 8, 4),
+    (3, 4, 4, 32, 16, 2),      # MHA
+    (1, 16, 2, 128, 8, 8),     # deep GQA
+])
+def test_paged_decode_vs_ref(dtype, B, H, KV, hd, page, ppseq):
+    n_pages = B * ppseq + 2
+    q = _rand((B, H, hd), dtype)
+    kp = _rand((n_pages, page, KV, hd), dtype)
+    vp = _rand((n_pages, page, KV, hd), dtype)
+    tbl = jnp.asarray(
+        RNG.permutation(n_pages)[:B * ppseq].reshape(B, ppseq), jnp.int32)
+    lens = jnp.asarray(RNG.integers(1, page * ppseq + 1, B), jnp.int32)
+    out = paged_decode_attention_op(q, kp, vp, tbl, lens, interpret=True)
+    exp = paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_decode_ignores_pages_beyond_length():
+    """Garbage in pages past ``length`` must not leak into the output."""
+    B, H, KV, hd, page, ppseq = 1, 4, 2, 32, 8, 4
+    n_pages = 8
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.arange(ppseq, dtype=jnp.int32)[None]
+    lens = jnp.array([11], jnp.int32)
+    out1 = paged_decode_attention_op(q, kp, vp, tbl, lens, interpret=True)
+    kp2 = kp.at[2:].set(1e6)       # poison pages beyond length
+    vp2 = vp.at[2:].set(-1e6)
+    out2 = paged_decode_attention_op(q, kp2, vp2, tbl, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (
+    A100, BatchCostModel, ExecutionPredictor, LocalScheduler, QueuedWork,
+    Request, plan_chunked_transfer, split_request,
+)
+from repro.core.costmodel import WorkItem
+from repro.core.kv_transfer import monolithic_exposed
+from repro.core.local_scheduler import DecodeWork, PrefillWork
+
+COST = BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+# ---------------- micro-request algebra ----------------
+@given(P=st.integers(1, 20_000), D=st.integers(1, 20_000),
+       phi=st.floats(0.0, 1.0, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_split_partitions_exactly(P, D, phi):
+    r = Request("r", 0.0, P, D)
+    a, b = split_request(r, phi)
+    spans = [(m.start, m.end) for m in (a, b) if m is not None]
+    # contiguity + exact coverage of [0, L)
+    assert spans[0][0] == 0 and spans[-1][1] == r.L
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 == s2
+    # work conservation across phases
+    pf = sum(m.prefill_tokens for m in (a, b) if m is not None)
+    dc = sum(m.decode_tokens for m in (a, b) if m is not None)
+    assert pf == P and dc == D
+
+
+@given(P=st.integers(1, 20_000), D=st.integers(1, 20_000),
+       phi=st.floats(0.0, 1.0, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_beta_handoff_covers_alpha_span(P, D, phi):
+    r = Request("r", 0.0, P, D)
+    a, b = split_request(r, phi)
+    if a is not None and b is not None:
+        assert b.handoff_tokens == a.end
+
+
+# ---------------- cost model monotonicity ----------------
+@given(t1=st.integers(1, 4096), t2=st.integers(1, 4096),
+       ctx=st.integers(0, 16_384), dnum=st.integers(0, 128))
+@settings(max_examples=100, deadline=None)
+def test_latency_monotone_in_prefill_tokens(t1, t2, ctx, dnum):
+    lo, hi = min(t1, t2), max(t1, t2)
+    a = COST.mixed_batch_latency(lo, ctx, dnum, ctx)
+    b = COST.mixed_batch_latency(hi, ctx, dnum, ctx)
+    assert b >= a - 1e-12
+
+
+@given(dnum=st.integers(0, 64), ctx=st.integers(0, 16_384),
+       slo=st.floats(0.01, 0.5))
+@settings(max_examples=100, deadline=None)
+def test_prefill_budget_never_exceeds_slo(dnum, ctx, slo):
+    m = COST.max_prefill_tokens(slo, dnum, ctx)
+    assert m >= 0
+    if m > 0:
+        assert COST.mixed_batch_latency(m, 0, dnum, ctx) <= slo * 1.05
+
+
+# ---------------- Algorithm 2 invariants ----------------
+@given(n_pf=st.integers(0, 16), n_dc=st.integers(0, 64),
+       seed=st.integers(0, 1000))
+@settings(max_examples=60, deadline=None)
+def test_local_batch_admits_all_decodes_and_caps_prefill(n_pf, n_dc, seed):
+    rng = np.random.default_rng(seed)
+    ls = LocalScheduler(COST, slo=0.1)
+    pq = [PrefillWork(f"p{i}", int(rng.integers(1, 8192)),
+                      int(rng.integers(0, 4096))) for i in range(n_pf)]
+    dq = [DecodeWork(f"d{i}", int(rng.integers(1, 8192)))
+          for i in range(n_dc)]
+    plan = ls.next_batch(pq, dq)
+    assert plan.dnum == min(n_dc, ls.max_batch_requests)
+    # grants never exceed remaining work
+    for w, g in plan.prefills:
+        assert 0 < g <= w.remaining
+    # FCFS: granted requests form a prefix of the queue
+    granted = [w.rid for w, _ in plan.prefills]
+    assert granted == [w.rid for w in pq[:len(granted)]]
+
+
+# ---------------- predictor ----------------
+@given(seed=st.integers(0, 500), extra=st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_drain_time_superadditive_under_load(seed, extra):
+    rng = np.random.default_rng(seed)
+    pred = ExecutionPredictor(COST)
+    q = [QueuedWork(f"q{i}", int(rng.integers(0, 4096)),
+                    int(rng.integers(1, 1024)), int(rng.integers(0, 4096)))
+         for i in range(int(rng.integers(1, 8)))]
+    t0 = pred.drain_time(q)
+    more = q + [QueuedWork(f"x{i}", 1024, 256, 1024) for i in range(extra)]
+    assert pred.drain_time(more) >= t0
+
+
+# ---------------- chunked transfer ----------------
+@given(n=st.integers(1, 50_000), chunk=st.integers(64, 4096))
+@settings(max_examples=100, deadline=None)
+def test_chunked_exposure_never_worse_than_monolithic(n, chunk):
+    plan = plan_chunked_transfer(COST, n, chunk)
+    assert 0.0 <= plan.exposed <= monolithic_exposed(COST, n) + 1e-9
+    assert plan.transfer_done >= plan.compute_done
+    # chunk count covers all tokens
+    assert plan.n_chunks == -(-n // chunk)

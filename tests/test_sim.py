@@ -1,0 +1,86 @@
+"""Cluster-simulator behaviour tests: the paper's qualitative claims must
+hold on the calibrated simulator."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import A100, BatchCostModel
+from repro.data import generate_trace, hybrid_trace
+from repro.sim import (
+    ClusterSim, ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
+    SimConfig,
+)
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+def _run(cost, policy, reqs, n=2):
+    sim = ClusterSim(cost, policy, SimConfig(n_instances=n))
+    return sim.run(reqs)
+
+
+def test_all_requests_complete_and_tokens_conserved(cost):
+    reqs = generate_trace("burstgpt", 2.0, 30, seed=3)
+    m = _run(cost, DynaServePolicy(cost), reqs)
+    assert m.completed == len(reqs)
+    assert m.tokens_total == sum(r.D for r in reqs)
+
+
+def test_colocation_violates_slo_on_long_prompts(cost):
+    """Paper Table 1: chunked-prefill colocation busts the 100ms TBT on
+    the P-8192/D-32 workload; disaggregation holds it."""
+    reqs = generate_trace("azure_code", 2.0, 30, seed=0)
+    m_c = _run(cost, ColocationPolicy(2048), reqs)
+    m_d = _run(cost, DisaggregationPolicy(), reqs)
+    assert m_c.p99_tbt() > 0.3
+    assert m_d.p99_tbt() < 0.1
+
+
+def test_dynaserve_beats_both_on_skewed_load(cost):
+    """Paper Fig 8/9: higher goodput than both baselines on the
+    prefill-heavy workload at saturating QPS."""
+    reqs = generate_trace("azure_code", 2.0, 40, seed=1)
+    g_dyn = _run(cost, DynaServePolicy(cost), reqs).goodput
+    g_col = _run(cost, ColocationPolicy(2048), reqs).goodput
+    g_dis = _run(cost, DisaggregationPolicy(), reqs).goodput
+    assert g_dyn > g_col
+    assert g_dyn > g_dis
+
+
+def test_slo_aware_batching_lifts_attainment(cost):
+    """Paper Fig 11: disabling SLO-aware batching tanks attainment."""
+    reqs = generate_trace("azure_code", 2.0, 30, seed=2)
+    with_ = _run(cost, DynaServePolicy(cost, slo_aware_batching=True), reqs)
+    without = _run(cost, DynaServePolicy(cost, slo_aware_batching=False), reqs)
+    assert with_.token_attainment > 0.9
+    assert without.token_attainment < with_.token_attainment - 0.2
+
+
+def test_dynaserve_wins_hybrid_workload(cost):
+    """Paper §6.4: the 50/50 hybrid mix is where static partitioning is
+    inherently unbalanced."""
+    reqs = hybrid_trace(3.0, 40, seed=0)
+    g_dyn = _run(cost, DynaServePolicy(cost), reqs).goodput
+    g_dis = _run(cost, DisaggregationPolicy(), reqs).goodput
+    assert g_dyn > g_dis
+
+
+def test_transfer_overlap_accounting(cost):
+    reqs = generate_trace("burstgpt", 2.0, 30, seed=4)
+    sim = ClusterSim(cost, DynaServePolicy(cost), SimConfig(n_instances=2))
+    m = sim.run(reqs)
+    if m.transfer_bytes_total > 0:
+        naive = m.transfer_bytes_total / cost.hw.link_bw
+        assert m.transfer_exposed_total < 0.25 * naive
+
+
+def test_prediction_error_tolerance(cost):
+    """Paper Table 4: goodput degrades <10% at sigma=100 tokens."""
+    base = generate_trace("mini_reasoning", 2.0, 40, seed=5, predict_sigma=0)
+    errd = generate_trace("mini_reasoning", 2.0, 40, seed=5, predict_sigma=100)
+    g0 = _run(cost, DynaServePolicy(cost), base).goodput
+    g1 = _run(cost, DynaServePolicy(cost), errd).goodput
+    assert g1 > 0.85 * g0

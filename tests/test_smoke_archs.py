@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch instantiates a REDUCED same-family variant (<=2 pattern
+groups, d_model<=512, <=4 experts) and runs one forward and one train step
+on CPU, asserting output shapes and the absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.data.tokens import token_batches
+from repro.models.model import forward, init_params, loss_fn
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@pytest.fixture(scope="module", params=ASSIGNED_ARCHS)
+def arch(request):
+    return request.param
+
+
+def _batch(cfg, B=2, T=16):
+    it = token_batches(cfg, B, T, seed=0)
+    return {k: jnp.asarray(v) for k, v in next(it).items()}
+
+
+def test_smoke_reduction_limits(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 4
+    if cfg.moe_experts:
+        assert cfg.moe_experts <= 4
+
+
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.source, f"{arch} missing citation"
+    expected = {
+        "internvl2_76b": (80, 8192, 64, 8, 28672, 128256),
+        "chatglm3_6b": (28, 4096, 32, 2, 13696, 65024),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064),
+        "whisper_large_v3": (32, 1280, 20, 20, 5120, 51866),
+        "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+        "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen1_5_32b": (64, 5120, 40, 40, 27392, 152064),
+        "mamba2_780m": (48, 1536, 1, 1, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = _batch(cfg)
+    logits, _, aux = forward(params, cfg, b.get("tokens"),
+                             extra_embeds=b.get("extra_embeds"),
+                             frames=b.get("frames"))
+    B = b["labels"].shape[0]
+    total = (b["tokens"].shape[1] if "tokens" in b else 0) + \
+        (cfg.num_patches if cfg.arch_type == "vlm" else 0)
+    assert logits.shape == (B, total, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+
+
+def test_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = adamw_init(params, opt_cfg)
+    b = _batch(cfg)
+
+    @jax.jit
+    def step(p, o, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda q: loss_fn(q, cfg, batch), has_aux=True)(p)
+        p2, o2, m = adamw_update(grads, o, p, opt_cfg)
+        return p2, o2, loss
+
+    p2, o2, loss = step(params, opt, b)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float64), np.asarray(bb, np.float64))
+        for a, bb in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved, f"{arch}: optimizer did not update parameters"
+    for leaf in jax.tree.leaves(p2):
+        assert bool(jnp.isfinite(leaf).all()), f"{arch}: NaN in updated params"
