@@ -11,7 +11,7 @@ from repro.configs import get_config                      # noqa: E402
 from repro.core.costmodel import A100, BatchCostModel     # noqa: E402
 from repro.sim import (                                   # noqa: E402
     ClusterSim, ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
-    SimConfig,
+    ElasticDynaServePolicy, SimConfig,
 )
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -28,6 +28,8 @@ def make_policy(name: str, cost, **kw):
         return DisaggregationPolicy()
     if name == "dyna":
         return DynaServePolicy(cost, **kw)
+    if name == "elastic":
+        return ElasticDynaServePolicy(cost, **kw)
     raise ValueError(name)
 
 

@@ -24,6 +24,7 @@ MODULES = [
     "tab4_sensitivity",
     "kv_transfer_overlap",
     "ablation_split",
+    "elastic_shift",
     "kernel_bench",
     "roofline",
 ]

@@ -1,0 +1,48 @@
+"""Compatibility shims across jax versions (the 0.4 -> 0.5+ renames).
+
+Every version probe for the jax API migration lives here so the next
+rename is a one-file edit:
+
+  * ``pltpu.TPUCompilerParams``      -> ``pltpu.CompilerParams``
+  * ``jax.experimental.shard_map``   -> ``jax.shard_map`` (check_rep ->
+    check_vma)
+  * ``jax.make_mesh`` grew ``axis_types=`` / ``jax.sharding.AxisType``
+  * ``Compiled.cost_analysis()`` returned ``[dict]``, now ``dict``
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.4.38 names this TPUCompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+
+def shard_map_compat(body, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (jax < 0.5 only has the
+    jax.experimental spelling, with check_rep instead of check_vma)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh with Auto axis types where supported (jax < 0.5 has
+    neither jax.sharding.AxisType nor the axis_types kwarg)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() (jax < 0.5 returns [dict])."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost

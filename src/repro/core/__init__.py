@@ -7,3 +7,7 @@ from repro.core.local_scheduler import LocalScheduler, ProfileTable  # noqa: F40
 from repro.core.predictor import ExecutionPredictor, QueuedWork  # noqa: F401
 from repro.core.global_scheduler import GlobalScheduler  # noqa: F401
 from repro.core.kv_transfer import ChunkTransferPlan, plan_chunked_transfer  # noqa: F401
+from repro.core.elastic import (  # noqa: F401
+    DrainInstance, ElasticConfig, InstanceStat, MigrateWork, PoolController,
+    ScaleUp, SetRoleBias,
+)

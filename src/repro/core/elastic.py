@@ -1,0 +1,236 @@
+"""Elastic instance-pool controller (the paper's *elastic execution*).
+
+DynaServe's unified instances are supposed to absorb workload shifts that
+break both colocated and disaggregated deployments.  This module supplies
+the control loop that makes the pool elastic:
+
+  * **Load monitoring** — per-instance predicted drain times (the same
+    ``ExecutionPredictor`` quantity Algorithm 1 probes) are EWMA-smoothed
+    into a pool-level load signal.
+  * **Workload-shift detection** — an EWMA of the arriving prefill/decode
+    token mix tracks drift between prefill-heavy (AzureCode-like) and
+    decode-heavy (reasoning-like) regimes; queue-depth imbalance between
+    instances flags skewed placement.
+  * **Actuation** — the controller emits declarative ``PoolAction``s:
+    scale the pool up/down within ``[min_instances, max_instances]``,
+    drift per-instance *role bias* (unified <-> prefill-heavy <->
+    decode-heavy, consumed by the local scheduler's batch composition and
+    the global scheduler's pair picking), and migrate queued
+    micro-requests off hot instances (the KV move is costed with
+    ``plan_chunked_transfer``).
+
+The controller is substrate-agnostic: it consumes ``InstanceStat``
+snapshots and returns actions.  ``repro.sim.policies.ElasticDynaServePolicy``
+applies them to the discrete-event simulator; ``repro.engine.cluster``
+applies the attach/drain subset to real JAX engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticConfig:
+    """Knobs of the elastic control loop (all times in seconds)."""
+    min_instances: int = 1
+    max_instances: int = 8
+    check_interval: float = 1.0        # period of the pool-control loop
+    # --- load signal ---
+    load_ewma_alpha: float = 0.5       # smoothing of the avg-drain signal
+    mix_ewma_alpha: float = 0.2        # smoothing of the prefill-fraction signal
+    # --- scaling thresholds ---
+    scale_up_drain: float = 1.5        # avg predicted drain (s) triggering scale-up
+    scale_down_drain: float = 0.45     # avg predicted drain (s) triggering drain
+    # a pool whose total queued micro-requests fit comfortably on one
+    # fewer instance also consolidates (predicted drain alone cannot see
+    # sparseness: one long decode tail pins it at seconds)
+    queue_low_watermark: int = 2       # queued micros per remaining instance
+    scale_up_cooldown: float = 1.0
+    scale_down_cooldown: float = 3.0
+    # --- rebalancing ---
+    rebalance_ratio: float = 4.0       # hot/cold drain ratio triggering migration
+    rebalance_slack: float = 0.5       # absolute drain gap (s) required as well
+    migrate_max: int = 4               # micro-requests moved per check
+    # --- role drift ---
+    bias_drift: float = 0.3            # per-check drift rate toward the target bias
+    bias_span: float = 1.0             # |role bias| cap; 2**bias scales prefill budget
+
+
+@dataclasses.dataclass
+class InstanceStat:
+    """Snapshot of one pool member, as the controller sees it."""
+    iid: int
+    drain_time: float                  # predicted seconds to empty the queue
+    queued_prefill_tokens: int
+    queued_decode_tokens: int
+    n_queued: int                      # queued micro-requests (movable work)
+    draining: bool
+    role_bias: float
+
+
+# ---------------------------------------------------------------------------
+# Declarative pool actions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ScaleUp:
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainInstance:
+    iid: int
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrateWork:
+    src: int
+    dst: int
+    max_micros: int
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SetRoleBias:
+    iid: int
+    bias: float
+
+
+PoolAction = Union[ScaleUp, DrainInstance, MigrateWork, SetRoleBias]
+
+
+class PoolController:
+    """Turns pool snapshots into scale/drain/migrate/bias actions."""
+
+    def __init__(self, cfg: Optional[ElasticConfig] = None):
+        self.cfg = cfg or ElasticConfig()
+        self._load: Optional[float] = None      # EWMA avg drain (s)
+        self._mix: Optional[float] = None       # EWMA prefill token fraction
+        self._last_up = -math.inf
+        self._last_down = -math.inf
+
+    # ------------------------------------------------------------------
+    # signals
+    # ------------------------------------------------------------------
+    def observe_arrival(self, prefill_tokens: int, decode_tokens: int) -> None:
+        """Feed the arriving request's token mix into the shift detector."""
+        total = prefill_tokens + decode_tokens
+        if total <= 0:
+            return
+        f = prefill_tokens / total
+        a = self.cfg.mix_ewma_alpha
+        self._mix = f if self._mix is None else (1 - a) * self._mix + a * f
+
+    @property
+    def load(self) -> float:
+        return self._load if self._load is not None else 0.0
+
+    @property
+    def prefill_fraction(self) -> Optional[float]:
+        return self._mix
+
+    @property
+    def target_bias(self) -> float:
+        """Pool-wide role-bias target in [-bias_span, +bias_span].
+
+        The neutral point is the balanced mix (prefill fraction 0.5);
+        AzureCode-like traffic (fraction -> 1) drifts instances
+        prefill-heavy, reasoning-like traffic (fraction -> 0) drifts them
+        decode-heavy.
+        """
+        if self._mix is None:
+            return 0.0
+        g = (2.0 * self._mix - 1.0) * self.cfg.bias_span
+        return max(-self.cfg.bias_span, min(self.cfg.bias_span, g))
+
+    # ------------------------------------------------------------------
+    # decision
+    # ------------------------------------------------------------------
+    def decide(self, stats: Sequence[InstanceStat],
+               now: float) -> List[PoolAction]:
+        cfg = self.cfg
+        actions: List[PoolAction] = []
+        active = [s for s in stats if not s.draining]
+        n_active = len(active)
+
+        if not active:
+            if len(stats) < cfg.max_instances:
+                self._last_up = now
+                return [ScaleUp("pool empty")]
+            return []
+
+        avg_drain = sum(s.drain_time for s in active) / n_active
+        a = cfg.load_ewma_alpha
+        self._load = avg_drain if self._load is None \
+            else (1 - a) * self._load + a * avg_drain
+
+        # ---- scale up / down (with hysteresis via distinct thresholds
+        # and cooldowns so a single burst can't thrash the pool) ----
+        total_queued = sum(s.n_queued for s in active)
+        low_load = self._load < cfg.scale_down_drain
+        sparse = total_queued <= (n_active - 1) * cfg.queue_low_watermark
+        # growth needs enough queued work to occupy another instance;
+        # otherwise a long decode tail (which pins the drain EWMA high)
+        # would flap against the sparse-consolidation rule
+        has_backlog = total_queued > n_active * cfg.queue_low_watermark
+        # still-draining members count toward the cap (they hold resources
+        # until retired); the applier un-drains one instead of attaching,
+        # so the pool never runs more than max_instances concurrently
+        draining_iids = {s.iid for s in stats if s.draining}
+        scaled_up = False
+        if (self._load > cfg.scale_up_drain and has_backlog
+                and n_active < cfg.max_instances
+                and now - self._last_up >= cfg.scale_up_cooldown):
+            self._last_up = now
+            scaled_up = True
+            actions.append(ScaleUp(f"load {self._load:.2f}s > "
+                                   f"{cfg.scale_up_drain:.2f}s"))
+        elif ((low_load or (sparse and self._load <= cfg.scale_up_drain))
+                and n_active > cfg.min_instances
+                and now - self._last_down >= cfg.scale_down_cooldown):
+            # sparse alone may not drain an overloaded pool: a few heavy
+            # requests read as "sparse" by count while drains are long
+            victim = min(active, key=lambda s: (s.drain_time, s.n_queued))
+            self._last_down = now
+            why = (f"load {self._load:.2f}s < {cfg.scale_down_drain:.2f}s"
+                   if low_load else
+                   f"{total_queued} queued fit on {n_active - 1} instances")
+            actions.append(DrainInstance(victim.iid, why))
+            draining_iids.add(victim.iid)
+            active = [s for s in active if s.iid != victim.iid]
+            n_active -= 1
+
+        # ---- migrate work off draining members (including the one just
+        # picked above) so they can retire.  Skipped on a scale-up round:
+        # the applier un-drains a draining member first, and evacuating
+        # the instance we just decided to keep would be self-defeating ----
+        cold = min(active, key=lambda s: s.drain_time) if active else None
+        if not scaled_up:
+            for s in stats:
+                if (s.iid in draining_iids and s.n_queued > 0
+                        and cold is not None):
+                    actions.append(MigrateWork(
+                        s.iid, cold.iid, min(s.n_queued, cfg.migrate_max),
+                        "evacuating draining instance"))
+
+        # ---- rebalance queue-depth imbalance between live members ----
+        if n_active >= 2:
+            hot = max(active, key=lambda s: s.drain_time)
+            cold = min(active, key=lambda s: s.drain_time)
+            if (hot.iid != cold.iid and hot.n_queued > 1
+                    and hot.drain_time > cfg.rebalance_ratio * cold.drain_time
+                    and hot.drain_time - cold.drain_time > cfg.rebalance_slack):
+                actions.append(MigrateWork(
+                    hot.iid, cold.iid, cfg.migrate_max,
+                    f"imbalance {hot.drain_time:.2f}s vs "
+                    f"{cold.drain_time:.2f}s"))
+
+        # ---- drift role bias toward the observed workload mix ----
+        g = self.target_bias
+        for s in active:
+            nb = s.role_bias + cfg.bias_drift * (g - s.role_bias)
+            if abs(nb - s.role_bias) > 1e-4:
+                actions.append(SetRoleBias(s.iid, nb))
+        return actions

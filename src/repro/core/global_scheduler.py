@@ -19,9 +19,18 @@ from repro.core.request import MicroRequest, Request, split_request
 
 @dataclasses.dataclass
 class InstanceView:
-    """What the global scheduler knows about one unified instance."""
+    """What the global scheduler knows about one unified instance.
+
+    ``draining`` members accept no new placements (the elastic pool is
+    retiring them); ``role_bias`` is the pool controller's drift in
+    [-1, 1] (+ = prefill-heavy, - = decode-heavy) used to steer alpha
+    micro-requests toward prefill-leaning instances and beta
+    micro-requests toward decode-leaning ones.
+    """
     iid: int
     queue: List[QueuedWork]
+    draining: bool = False
+    role_bias: float = 0.0
 
 
 @dataclasses.dataclass
@@ -65,14 +74,32 @@ class GlobalScheduler:
 
     def pick_pair(self, instances: Sequence[InstanceView]) -> Tuple[int, int]:
         """Round-robin over the unified pool (paper §3.1), tie-broken by
-        predicted load so a hot instance is never the alpha target."""
+        predicted load so a hot instance is never the alpha target.
+
+        Elastic pools add two refinements: draining instances are never
+        picked (unless the whole pool is draining), and role bias steers
+        the prefill-dominated alpha toward prefill-leaning instances and
+        the decode-dominated beta toward decode-leaning ones.  Returns
+        *indices into the sequence*, as before.
+        """
         n = len(instances)
         if n == 1:
             return 0, 0
-        order = sorted(range(n), key=lambda i: (
-            self.predictor.drain_time(instances[i].queue), (i - self._rr) % n))
+        cands = [i for i in range(n) if not instances[i].draining] or \
+            list(range(n))
+        if len(cands) == 1:
+            return cands[0], cands[0]
+        dt = {i: self.predictor.drain_time(instances[i].queue) for i in cands}
+        # bias weight relative to typical drain so it reorders only
+        # near-ties; the floor keeps it meaningful on an idle pool
+        w = 0.25 * (sum(dt.values()) / len(cands)) + 1e-3
+        rr = self._rr
         self._rr = (self._rr + 1) % n
-        return order[0], order[1]
+        ia = min(cands, key=lambda i: (
+            dt[i] - w * instances[i].role_bias, (i - rr) % n))
+        ib = min((i for i in cands if i != ia), key=lambda i: (
+            dt[i] + w * instances[i].role_bias, (i - rr) % n))
+        return ia, ib
 
     def schedule(self, r: Request,
                  instances: Sequence[InstanceView]) -> Placement:
@@ -81,6 +108,18 @@ class GlobalScheduler:
         r_eff = dataclasses.replace(r, predicted_decode=D)
         ia, ib = self.pick_pair(instances)
         qa, qb = instances[ia].queue, instances[ib].queue
+        same_instance = ia == ib
+        # Placement carries instance *ids*, not view indices, so callers
+        # may pass a sparse/filtered view of an elastic pool.
+        ia, ib = instances[ia].iid, instances[ib].iid
+
+        # single (non-draining) instance: splitting would hand KV from
+        # the instance to itself — run the request whole
+        if same_instance:
+            whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
+            t1 = self.predictor.completion_time(qa, self._work_of(whole))
+            return Placement(whole, None, ia, None, 1.0, t1, 0.0, 0,
+                             time.perf_counter() - t0)
 
         # cold start: both instances idle -> PD-disaggregation split
         if not qa and not qb:

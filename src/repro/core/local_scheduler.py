@@ -94,6 +94,14 @@ class LocalScheduler:
         self.slo_aware = slo_aware
         self.static_chunk = static_chunk
         self.slo_margin = slo_margin
+        # Elastic role bias in [-1, 1] set by the pool controller:
+        # +1 = prefill-heavy (2x the prefill budget — few decodes are
+        # running, so TBT headroom is traded for prefill throughput),
+        # -1 = decode-heavy (half the budget, protecting the TBT stream).
+        self.role_bias = 0.0
+
+    def set_role_bias(self, bias: float) -> None:
+        self.role_bias = max(-1.0, min(1.0, bias))
 
     # ---------------- Algorithm 2 ----------------
     def record(self, plan: BatchPlan, measured: float) -> None:
@@ -102,7 +110,7 @@ class LocalScheduler:
 
     def max_prefill_allowed(self, ctx: int, dnum: int, p_ctx: int = 0) -> int:
         if not self.slo_aware:
-            return self.static_chunk or 2048
+            return self._biased(self.static_chunk or 2048)
         slo = self.slo * self.slo_margin
         # profile-table refinement: probe geometric plen candidates and
         # take the largest whose recorded latency fits the SLO; fall back
@@ -115,10 +123,17 @@ class LocalScheduler:
             if t is not None and t <= slo:
                 best = plen if best is None else max(best, plen)
             plen <<= 1
-        if best is None:
-            return analytic
-        # trust the table but never stray more than 2x from the model
-        return int(min(max(best, analytic / 2), analytic * 2))
+        out = analytic if best is None else \
+            int(min(max(best, analytic / 2), analytic * 2))
+        # role bias trades TBT headroom for prefill throughput, but the
+        # "never stray more than 2x from the model" bound still holds
+        # in both directions
+        return int(min(max(self._biased(out), analytic / 2), 2 * analytic))
+
+    def _biased(self, budget: int) -> int:
+        if not self.role_bias:
+            return budget
+        return max(0, int(budget * 2.0 ** self.role_bias))
 
     def next_batch(self, prefill_queue: Sequence[PrefillWork],
                    decode_queue: Sequence[DecodeWork]) -> BatchPlan:

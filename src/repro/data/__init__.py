@@ -1,3 +1,5 @@
 from repro.data.workloads import (  # noqa: F401
-    WORKLOADS, WorkloadSpec, generate_trace, hybrid_trace, replay_trace,
+    SHIFTING_TRACES, WORKLOADS, WorkloadSpec, burst_trace, diurnal_trace,
+    generate_trace, hybrid_trace, phase_shift_trace, replay_trace,
+    shifting_trace,
 )

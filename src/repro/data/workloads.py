@@ -59,14 +59,8 @@ def generate_trace(workload: str, qps: float, duration: float,
     arrivals = arrivals[arrivals < duration]
     n = len(arrivals)
     p, d = _lengths(rng, spec, n)
-    reqs = []
-    for i in range(n):
-        pred = d[i]
-        if predict_sigma > 0:
-            pred = max(1, int(round(d[i] + rng.normal(0, predict_sigma))))
-        reqs.append(Request(f"{workload}-{i}", float(arrivals[i]),
-                            int(p[i]), int(d[i]), predicted_decode=int(pred)))
-    return reqs
+    return [_req(f"{workload}-{i}", arrivals[i], p[i], d[i], rng,
+                 predict_sigma) for i in range(n)]
 
 
 def hybrid_trace(qps: float, duration: float, seed: int = 0,
@@ -80,6 +74,126 @@ def hybrid_trace(qps: float, duration: float, seed: int = 0,
     for i, r in enumerate(reqs):
         r.rid = f"hybrid-{i}"
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# Shifting traces (elastic-pool scenarios)
+#
+# Three families of non-stationary traffic the fixed-N seed could not
+# express, used by the elastic instance pool (repro.core.elastic) and
+# benchmarks/elastic_shift.py:
+#   * diurnal  — sinusoidal QPS ramp (nonhomogeneous Poisson, thinning)
+#   * phases   — hard switches between the four paper workloads
+#   * burst    — baseline traffic with injected burst windows
+# ---------------------------------------------------------------------------
+def _thinned_arrivals(rng: np.random.Generator, rate_fn, rate_max: float,
+                      duration: float) -> np.ndarray:
+    """Nonhomogeneous Poisson arrivals via Lewis-Shedler thinning."""
+    t = 0.0
+    out = []
+    while True:
+        t += rng.exponential(1.0 / rate_max)
+        if t >= duration:
+            break
+        if rng.random() < rate_fn(t) / rate_max:
+            out.append(t)
+    return np.asarray(out)
+
+
+def diurnal_trace(qps_peak: float, duration: float, seed: int = 0,
+                  workload: str = "burstgpt", floor: float = 0.15,
+                  period: Optional[float] = None,
+                  predict_sigma: float = 0.0) -> List[Request]:
+    """Sinusoidal QPS between ``floor * qps_peak`` and ``qps_peak`` —
+    one full valley->peak->valley cycle per ``period`` (default: the
+    whole window), starting at the valley."""
+    spec = WORKLOADS[workload]
+    rng = np.random.default_rng(seed)
+    period = period or duration
+
+    def rate(t: float) -> float:
+        s = 0.5 * (1.0 - np.cos(2 * np.pi * t / period))
+        return qps_peak * (floor + (1.0 - floor) * s)
+
+    arrivals = _thinned_arrivals(rng, rate, qps_peak, duration)
+    p, d = _lengths(rng, spec, len(arrivals))
+    return [_req(f"diurnal-{i}", arrivals[i], p[i], d[i], rng, predict_sigma)
+            for i in range(len(arrivals))]
+
+
+def phase_shift_trace(qps: float, duration: float, seed: int = 0,
+                      phases=("mini_reasoning", "azure_code",
+                              "burstgpt", "arxiv_summarization"),
+                      predict_sigma: float = 0.0) -> List[Request]:
+    """Hard workload-mix switches: the window is split evenly across
+    ``phases`` and each segment draws request shapes from a different
+    paper workload (decode-heavy -> prefill-heavy -> balanced -> ...),
+    stressing role-bias drift."""
+    rng = np.random.default_rng(seed)
+    seg = duration / len(phases)
+    reqs: List[Request] = []
+    t = 0.0
+    i = 0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration:
+            break
+        spec = WORKLOADS[phases[min(int(t // seg), len(phases) - 1)]]
+        p, d = _lengths(rng, spec, 1)
+        reqs.append(_req(f"phase-{i}", t, p[0], d[0], rng, predict_sigma))
+        i += 1
+    return reqs
+
+
+def burst_trace(qps_base: float, duration: float, seed: int = 0,
+                workload: str = "burstgpt",
+                bursts=((0.35, 0.15, 5.0),),
+                predict_sigma: float = 0.0) -> List[Request]:
+    """Baseline Poisson traffic with injected bursts.  Each burst is
+    ``(start_frac, len_frac, multiplier)``: within the window
+    ``[start_frac, start_frac + len_frac] * duration`` the arrival rate
+    is multiplied — the scale-up trigger scenario."""
+    spec = WORKLOADS[workload]
+    rng = np.random.default_rng(seed)
+    mult_max = max((m for _, _, m in bursts), default=1.0)
+
+    def rate(t: float) -> float:
+        f = t / duration
+        m = 1.0
+        for start, length, mult in bursts:
+            if start <= f < start + length:
+                m = max(m, mult)
+        return qps_base * m
+
+    arrivals = _thinned_arrivals(rng, rate, qps_base * max(1.0, mult_max),
+                                 duration)
+    p, d = _lengths(rng, spec, len(arrivals))
+    return [_req(f"burst-{i}", arrivals[i], p[i], d[i], rng, predict_sigma)
+            for i in range(len(arrivals))]
+
+
+SHIFTING_TRACES = {
+    "diurnal": diurnal_trace,
+    "phases": phase_shift_trace,
+    "burst": burst_trace,
+}
+
+
+def shifting_trace(kind: str, qps: float, duration: float, seed: int = 0,
+                   **kw) -> List[Request]:
+    """Dispatch into the shifting-trace family (see ``SHIFTING_TRACES``)."""
+    if kind not in SHIFTING_TRACES:
+        raise ValueError(f"unknown shifting trace {kind!r}; "
+                         f"one of {sorted(SHIFTING_TRACES)}")
+    return SHIFTING_TRACES[kind](qps, duration, seed, **kw)
+
+
+def _req(rid: str, t: float, p: int, d: int, rng: np.random.Generator,
+         predict_sigma: float) -> Request:
+    pred = int(d)
+    if predict_sigma > 0:
+        pred = max(1, int(round(d + rng.normal(0, predict_sigma))))
+    return Request(rid, float(t), int(p), int(d), predicted_decode=pred)
 
 
 def replay_trace(qps: float, duration: float, seed: int = 0) -> List[Request]:

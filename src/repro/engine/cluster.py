@@ -53,24 +53,74 @@ class LiveMicro:
 
 
 class ServingCluster:
-    """N unified instances + DynaServe APS, on real engines."""
+    """N unified instances + DynaServe APS, on real engines.
+
+    The pool is elastic: ``attach_instance`` adds a member between steps
+    and ``drain_instance`` retires one without dropping work — the
+    drained engine finishes its queue (it still receives beta handoffs
+    already committed to it), stops receiving placements, and is
+    detached once idle.
+    """
 
     def __init__(self, cfg: ModelConfig, params, n_instances: int = 2,
                  n_slots: int = 8, max_len: int = 512,
                  prefill_budget: int = 64, transfer_chunk: int = 32,
                  split: bool = True, hw: HardwareSpec = A100):
         self.cfg = cfg
-        self.engines = [InstanceEngine(cfg, params, n_slots, max_len)
-                        for _ in range(n_instances)]
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.engines: Dict[int, InstanceEngine] = {
+            i: InstanceEngine(cfg, params, n_slots, max_len)
+            for i in range(n_instances)
+        }
+        self.queues: Dict[int, List[LiveMicro]] = {
+            i: [] for i in range(n_instances)
+        }
+        self.draining: set = set()
+        self._next_eid = n_instances
         self.cost = BatchCostModel(cfg, hw)
         self.gs = GlobalScheduler(self.cost, margin_tokens=0)
         self.prefill_budget = prefill_budget
         self.transfer_chunk = transfer_chunk
         self.split = split
-        self.queues: List[List[LiveMicro]] = [[] for _ in range(n_instances)]
         self.pending_beta: Dict[str, LiveMicro] = {}
         self.kv_bytes_moved = 0
         self._iter = itertools.count()
+
+    # ---------------- elastic pool lifecycle ----------------
+    def active_ids(self) -> List[int]:
+        return sorted(e for e in self.engines if e not in self.draining)
+
+    def attach_instance(self) -> int:
+        """Scale up: add a fresh engine; it joins placement immediately."""
+        eid = self._next_eid
+        self._next_eid += 1
+        self.engines[eid] = InstanceEngine(self.cfg, self.params,
+                                           self.n_slots, self.max_len)
+        self.queues[eid] = []
+        return eid
+
+    def drain_instance(self, eid: int) -> None:
+        """Scale down: exclude ``eid`` from new placements; the engine is
+        detached by ``step`` once its queue and pending handoffs empty."""
+        if eid in self.engines:
+            self.draining.add(eid)
+
+    def _maybe_detach(self) -> None:
+        for eid in list(self.draining):
+            if len(self.engines) <= 1:
+                # the last engine can never leave; cancel its drain so
+                # the pool keeps accepting work
+                self.draining.discard(eid)
+                continue
+            if self.queues[eid]:
+                continue
+            if any(b.engine_id == eid for b in self.pending_beta.values()):
+                continue
+            del self.engines[eid]
+            del self.queues[eid]
+            self.draining.discard(eid)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -78,15 +128,16 @@ class ServingCluster:
         rid = rid or f"req{next(self._iter)}"
         r = Request(rid, time.time(), len(prompt), max_new_tokens)
         lr = LiveRequest(r, np.asarray(prompt, np.int32), max_new_tokens)
-        if self.split and len(self.engines) >= 2:
-            views = [InstanceView(i, self._view(i))
-                     for i in range(len(self.engines))]
+        # a fully-draining pool still has to place work somewhere
+        act = self.active_ids() or sorted(self.engines)
+        if self.split and len(act) >= 2:
+            views = [InstanceView(e, self._view(e)) for e in act]
             pl = self.gs.schedule(r, views)
             alpha, beta = pl.alpha, pl.beta
             ia, ib = pl.alpha_instance, pl.beta_instance
         else:
             alpha, beta = split_request(r, 1.0)
-            ia, ib = 0, None
+            ia, ib = act[0], None
         if alpha is not None and alpha.n_tokens > 0:
             slot = self.engines[ia].alloc(alpha.rid)
             lm = LiveMicro(lr, alpha, slot, 0, ia)
@@ -113,7 +164,8 @@ class ServingCluster:
         """One scheduling iteration across all instances; returns the
         number of work items executed."""
         executed = 0
-        for eid, eng in enumerate(self.engines):
+        for eid in sorted(self.engines):
+            eng = self.engines[eid]
             q = self.queues[eid]
             if not q:
                 continue
@@ -160,6 +212,7 @@ class ServingCluster:
                 if m.pos >= min(m.end, m.lr.req.true_L - 1) or \
                         len(m.lr.generated) >= m.lr.max_new_tokens:
                     self._finish_micro(m)
+        self._maybe_detach()
         return executed
 
     # ------------------------------------------------------------------

@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -116,7 +118,7 @@ def chunked_prefill_attention(q, k, v, offsets, *, bq: int = 128,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams as _CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -103,7 +105,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, KV, qpk, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables, lengths, qg, k_pages, v_pages)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map_compat as _shard_map_compat
 from repro.models.config import ModelConfig
 from repro.models.layers import (
     ParamFactory, apply_rope, init_norm, norm_fwd, rms_head_norm, rope_tables,
@@ -256,8 +257,7 @@ def _flash_decode_seqsharded(cfg: ModelConfig, q, k, v, qpos, kpos,
                 P(d_axes, None, None, None),       # extra k (in-flight)
                 P(d_axes, None, None, None),       # extra v
                 P(d_axes, None))                   # extra pos
-    sm = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(d_axes, None, None), check_vma=False)
+    sm = _shard_map_compat(body, mesh, in_specs, P(d_axes, None, None))
     ek, ev, epos = extra if extra is not None else (None, None, None)
     if ek is None:
         ek = jnp.zeros((B, 1, KV, hd), k.dtype)

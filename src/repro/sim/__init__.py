@@ -1,4 +1,5 @@
 from repro.sim.simulator import ClusterSim, SimConfig, SimMetrics  # noqa: F401
 from repro.sim.policies import (  # noqa: F401
     ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
+    ElasticDynaServePolicy,
 )

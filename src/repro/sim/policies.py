@@ -10,6 +10,10 @@ import dataclasses
 from typing import List, Optional, Tuple
 
 from repro.core.costmodel import BatchCostModel
+from repro.core.elastic import (
+    DrainInstance, ElasticConfig, InstanceStat, MigrateWork, PoolController,
+    ScaleUp, SetRoleBias,
+)
 from repro.core.global_scheduler import GlobalScheduler, InstanceView
 from repro.core.kv_transfer import monolithic_exposed, plan_chunked_transfer
 from repro.core.local_scheduler import LocalScheduler
@@ -134,6 +138,11 @@ class DynaServePolicy(BasePolicy):
         # ablation arm for Fig 11 (no SLO-aware batching)
         return LocalScheduler(cost, slo, slo_aware=False, static_chunk=2048)
 
+    def _views(self, sim) -> List[InstanceView]:
+        return [InstanceView(i.iid, self._queued_view(i), i.draining,
+                             i.role_bias)
+                for i in sim.pool_instances()]
+
     def place(self, r: Request, sim, now: float):
         from repro.sim.simulator import SimMicro
         if self.split_mode == "none":
@@ -150,9 +159,7 @@ class DynaServePolicy(BasePolicy):
             b = SimMicro(beta, 0, r.D, r.P, ready=float("inf"))
             self._pending_beta[alpha.rid] = b
             return [(ia, a), (ib, b)]
-        views = [InstanceView(i.iid, self._queued_view(i))
-                 for i in sim.instances]
-        pl = self.gs.schedule(r, views)
+        pl = self.gs.schedule(r, self._views(sim))
         self.last_overhead = pl.overhead_s
         out = []
         # clamp the *executed* token span to the true length (the predictor
@@ -180,7 +187,74 @@ class DynaServePolicy(BasePolicy):
     def on_micro_finished(self, m, sim, now: float) -> None:
         b = self._pending_beta.pop(m.rid, None)
         if b is not None:
+            if b.iid == m.iid:
+                # migration co-located the pair: the KV never crosses a
+                # link, so the handoff is free
+                sim.release_beta(b, now, 0.0, 0.0)
+                return
             plan = plan_chunked_transfer(sim.cost, m.mr.end,
                                          self.transfer_chunk)
             sim.release_beta(b, now + plan.exposed, plan.exposed,
                              plan.total_bytes)
+
+
+# ==========================================================================
+# Elastic DynaServe: DynaServe's APS + the pool controller
+# ==========================================================================
+class ElasticDynaServePolicy(DynaServePolicy):
+    """DynaServe with an elastic instance pool.
+
+    The simulator starts at ``SimConfig.n_instances`` (treat it as the
+    initial/minimum size) and the ``PoolController`` resizes within
+    ``[min_instances, max_instances]``, drifts role bias with the
+    observed prefill/decode mix, and migrates queued micro-requests off
+    hot or draining instances.  Placement only ever targets live,
+    non-draining members.
+    """
+
+    def __init__(self, cost: BatchCostModel, slo: float = 0.100,
+                 elastic: Optional[ElasticConfig] = None, **kw):
+        super().__init__(cost, slo, **kw)
+        if self.split_mode != "dynamic":
+            raise ValueError("ElasticDynaServePolicy requires "
+                             "split_mode='dynamic' (the ablation arms "
+                             "round-robin over the whole pool)")
+        self.controller = PoolController(elastic)
+
+    @property
+    def pool_interval(self) -> float:
+        return self.controller.cfg.check_interval
+
+    def place(self, r: Request, sim, now: float):
+        self.controller.observe_arrival(r.P, r.D_pred)
+        return super().place(r, sim, now)
+
+    def _stats(self, sim) -> List[InstanceStat]:
+        out = []
+        for inst in sim.pool_instances():
+            view = self._queued_view(inst)
+            out.append(InstanceStat(
+                iid=inst.iid,
+                drain_time=self.gs.predictor.drain_time(view),
+                queued_prefill_tokens=sum(q.prefill_remaining for q in view),
+                queued_decode_tokens=sum(q.decode_remaining for q in view),
+                n_queued=inst.n_queued,
+                draining=inst.draining,
+                role_bias=inst.role_bias,
+            ))
+        return out
+
+    def on_pool_check(self, sim, now: float) -> None:
+        for act in self.controller.decide(self._stats(sim), now):
+            if isinstance(act, ScaleUp):
+                inst = sim.add_instance()
+                # join at the pool's current role target so pick_pair
+                # doesn't transiently steer prefill away from the
+                # (idle, bias-0) newcomer
+                inst.scheduler.set_role_bias(self.controller.target_bias)
+            elif isinstance(act, DrainInstance):
+                sim.drain_instance(act.iid)
+            elif isinstance(act, MigrateWork):
+                sim.migrate(act.src, act.dst, act.max_micros)
+            elif isinstance(act, SetRoleBias):
+                sim.instances[act.iid].scheduler.set_role_bias(act.bias)

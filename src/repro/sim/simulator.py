@@ -7,13 +7,17 @@ unmodified on top.  Reproduces the paper's evaluation (goodput vs QPS,
 serving capacity, SLO attainment, replay) without GPUs; the *real* JAX
 engine (repro.engine) is exercised by the end-to-end integration tests
 instead.
+
+The instance pool is dynamic: policies with an ``on_pool_check`` hook get
+a periodic pool-control event and may ``add_instance`` / ``drain_instance``
+/ ``migrate`` between batches, so elastic policies (repro.core.elastic)
+resize and rebalance the pool mid-trace.  Fixed-N policies see exactly
+the old behaviour.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
-from collections import defaultdict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,7 +39,7 @@ class SimConfig:
     record_util: bool = False
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SimMicro:
     """Runtime state of one micro-request on an instance."""
     mr: MicroRequest
@@ -51,22 +55,40 @@ class SimMicro:
 
 
 class SimInstance:
-    def __init__(self, iid: int, scheduler: LocalScheduler, role: str = "unified"):
+    def __init__(self, iid: int, scheduler: LocalScheduler,
+                 role: str = "unified", spawned_at: float = 0.0):
         self.iid = iid
         self.scheduler = scheduler
         self.role = role           # unified | prefill | decode
         self.prefill_q: List[SimMicro] = []
         self.decode_q: List[SimMicro] = []
         self.busy = False
+        self.in_flight: set = set()    # micros inside the running batch
+        # elastic lifecycle: active segments [(start, end|None), ...]
+        self.draining = False
+        self.retired = False
+        self.segments: List[List[Optional[float]]] = [[spawned_at, None]]
         # accounting
         self.busy_time = 0.0
         self.flops_done = 0.0
         self.bytes_done = 0.0
         self.kv_tokens_resident = 0
 
+    @property
+    def role_bias(self) -> float:
+        return getattr(self.scheduler, "role_bias", 0.0)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.prefill_q) + len(self.decode_q)
+
     def has_work(self, now: float) -> bool:
         return any(m.ready <= now for m in self.prefill_q) or \
             any(m.ready <= now for m in self.decode_q)
+
+    def active_seconds(self, horizon: float) -> float:
+        return sum((end if end is not None else horizon) - start
+                   for start, end in self.segments)
 
 
 @dataclasses.dataclass
@@ -96,6 +118,14 @@ class SimMetrics:
     transfer_exposed_total: float
     transfer_bytes_total: float
     goodput_window: Optional[List[Tuple[float, float]]] = None
+    # elastic-pool accounting
+    instance_seconds: float = 0.0       # sum of per-instance active time
+    n_instances_peak: int = 0
+    n_instances_final: int = 0
+    migrations: int = 0
+    migration_bytes: float = 0.0
+    pool_events: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def goodput(self) -> float:
@@ -112,6 +142,12 @@ class SimMetrics:
     @property
     def token_attainment(self) -> float:
         return self.tokens_in_slo / max(1, self.tokens_total)
+
+    @property
+    def goodput_per_instance_second(self) -> float:
+        """SLO-attaining tokens per instance-second — the elastic pool's
+        efficiency metric (fixed-N pays for idle valleys)."""
+        return self.tokens_in_slo / max(1e-9, self.instance_seconds)
 
     def p99_tbt(self) -> float:
         return float(np.percentile(self.tbts, 99)) if len(self.tbts) else 0.0
@@ -133,9 +169,15 @@ class ClusterSim:
         self.req_states: Dict[str, ReqState] = {}
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = 0
+        self._arrivals_left = 0
+        self._open_requests = 0
         self.now = 0.0
         self.transfer_exposed = 0.0
         self.transfer_bytes = 0.0
+        self.migrations = 0
+        self.migration_bytes = 0.0
+        self.n_instances_peak = sim_cfg.n_instances
+        self.pool_events: List[Tuple[float, str]] = []
         self.sched_overheads: List[float] = []
 
     # ---------------- event plumbing ----------------
@@ -147,6 +189,10 @@ class ClusterSim:
     def run(self, requests: Sequence[Request]) -> SimMetrics:
         for r in requests:
             self._push(r.arrival, "arrival", r)
+        self._arrivals_left = len(requests)
+        interval = getattr(self.policy, "pool_interval", 0.0)
+        if interval and hasattr(self.policy, "on_pool_check"):
+            self._push(interval, "pool", interval)
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             if t > self.cfg.max_sim_time:
@@ -158,13 +204,120 @@ class ClusterSim:
                 self._on_batch_done(payload)
             elif kind == "kick":
                 self._maybe_start_batch(self.instances[payload])
+            elif kind == "pool":
+                self.policy.on_pool_check(self, self.now)
+                if self._arrivals_left > 0 or self._open_requests > 0:
+                    self._push(self.now + payload, "pool", payload)
         return self._metrics(requests)
+
+    # ---------------- elastic pool lifecycle ----------------
+    def active_instances(self) -> List[SimInstance]:
+        return [i for i in self.instances if not i.draining and not i.retired]
+
+    def pool_instances(self) -> List[SimInstance]:
+        """Members still holding or receiving work (not yet retired)."""
+        return [i for i in self.instances if not i.retired]
+
+    def add_instance(self) -> SimInstance:
+        """Scale up: cancel an in-flight drain (warmest), revive a
+        retired member (profile table stays warm), or append a fresh
+        one — in that order, so the pool never exceeds its cap while a
+        drain is still completing."""
+        inst = next((i for i in self.instances
+                     if i.draining and not i.retired), None)
+        if inst is not None:
+            inst.draining = False
+            label = "undrain"
+        else:
+            inst = next((i for i in self.instances if i.retired), None)
+            if inst is not None:
+                inst.retired = False
+                inst.draining = False
+                inst.segments.append([self.now, None])
+                label = "revive"
+            else:
+                iid = len(self.instances)
+                inst = SimInstance(
+                    iid,
+                    self.policy.make_local_scheduler(iid, self.cost,
+                                                     self.cfg.slo),
+                    self.policy.role_of(iid, iid + 1), spawned_at=self.now)
+                self.instances.append(inst)
+                label = "attach"
+        self.pool_events.append((self.now, f"{label} {inst.iid}"))
+        self.n_instances_peak = max(self.n_instances_peak,
+                                    len(self.active_instances()))
+        return inst
+
+    def drain_instance(self, iid: int) -> None:
+        """Scale down: stop placing work on ``iid``; it retires once its
+        queues empty (no request is ever dropped)."""
+        inst = self.instances[iid]
+        if inst.retired or inst.draining:
+            return
+        inst.draining = True
+        self.pool_events.append((self.now, f"drain {iid}"))
+        self._maybe_retire(inst)
+
+    def _maybe_retire(self, inst: SimInstance) -> None:
+        if inst.draining and not inst.busy and inst.n_queued == 0:
+            inst.draining = False
+            inst.retired = True
+            inst.segments[-1][1] = self.now
+            self.pool_events.append((self.now, f"retire {inst.iid}"))
+
+    def migrate(self, src_iid: int, dst_iid: int, max_micros: int) -> int:
+        """Move up to ``max_micros`` queued (not in-flight) micro-requests
+        from a hot instance to a cold one.  A micro that already computed
+        KV on the source pays the (window-aware) KV move on the
+        inter-instance link before it becomes runnable on the
+        destination; nothing overlaps it, so the move is fully exposed."""
+        src, dst = self.instances[src_iid], self.instances[dst_iid]
+        moved = 0
+
+        # a waiting beta has no KV yet (its handoff redirects to the new
+        # home); anything started owns KV for every position < pos
+        def resident_kv(m: SimMicro) -> int:
+            return 0 if m.ready == float("inf") else m.pos
+
+        # cheapest moves first: least resident KV on the source
+        candidates = sorted(
+            (m for m in src.prefill_q + src.decode_q
+             if m not in src.in_flight),
+            key=resident_kv)
+        for m in candidates:
+            if moved >= max_micros:
+                break
+            q_src = src.prefill_q if m in src.prefill_q else src.decode_q
+            q_dst = dst.prefill_q if q_src is src.prefill_q else dst.decode_q
+            q_src.remove(m)
+            resident = resident_kv(m)
+            if resident > 0:
+                nbytes = self.cost.kv_transfer_bytes(resident)
+                delay = self.cost.kv_transfer_time(resident)
+                m.ready = max(m.ready, self.now + delay)
+                self.migration_bytes += nbytes
+                self.transfer_bytes += nbytes
+                self.transfer_exposed += delay
+            m.iid = dst_iid
+            q_dst.append(m)
+            moved += 1
+            # wake the destination when the micro actually becomes
+            # runnable (a waiting beta is woken by release_beta instead)
+            if m.ready != float("inf"):
+                self._push(max(self.now, m.ready), "kick", dst_iid)
+        if moved:
+            self.migrations += moved
+            self._maybe_retire(src)
+        return moved
 
     # ---------------- arrival ----------------
     def _on_arrival(self, r: Request) -> None:
+        self._arrivals_left -= 1
         placements = self.policy.place(r, self, self.now)
         st = ReqState(r, n_micro=len(placements))
         self.req_states[r.rid] = st
+        self._open_requests += 1
         if hasattr(self.policy, "last_overhead"):
             self.sched_overheads.append(self.policy.last_overhead)
         for inst_id, sm in placements:
@@ -195,6 +348,7 @@ class ClusterSim:
         by_rid = {m.rid: m for m in pf + dc}
         grants = [(by_rid[w.rid], g) for w, g in plan.prefills]
         decs = [by_rid[w.rid] for w in plan.decodes]
+        inst.in_flight = {m for m, _ in grants} | set(decs)
         items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
                  [WorkItem("decode", 1, m.pos) for m in decs])
         lat = self.cost.latency(items)
@@ -209,6 +363,7 @@ class ClusterSim:
         iid, grants, decs, plan, lat = payload
         inst = self.instances[iid]
         inst.busy = False
+        inst.in_flight = set()
         inst.scheduler.record(plan, lat)
         # prefill progress
         for m, g in grants:
@@ -235,14 +390,16 @@ class ClusterSim:
                 inst.decode_q.remove(m)
                 self._micro_finished(m)
         self._maybe_start_batch(inst)
+        self._maybe_retire(inst)
 
     # ---------------- micro-request lifecycle ----------------
     def _micro_finished(self, m: SimMicro) -> None:
         st = self.req_states[m.mr.parent.rid]
         st.micro_done += 1
         self.policy.on_micro_finished(m, self, self.now)
-        if st.micro_done >= st.n_micro:
+        if st.micro_done >= st.n_micro and st.done_at is None:
             st.done_at = self.now
+            self._open_requests -= 1
 
     def release_beta(self, beta: SimMicro, ready: float,
                      exposed: float, nbytes: float) -> None:
@@ -281,12 +438,14 @@ class ClusterSim:
             if all(g <= slo for g in gaps):
                 req_ok += 1
         mfu, hbm, busy = [], [], []
+        inst_seconds = 0.0
         for inst in self.instances:
             mfu.append(inst.flops_done / max(duration, 1e-9) / self.cost.hw.peak_flops)
             hbm.append(min(1.0, (self.cost.weight_bytes +
                                  inst.kv_tokens_resident * self.cost.kv_bytes_per_tok)
                            / self.cfg.hbm_bytes))
             busy.append(inst.busy_time / max(duration, 1e-9))
+            inst_seconds += inst.active_seconds(duration)
         return SimMetrics(
             duration=duration,
             completed=completed,
@@ -302,4 +461,10 @@ class ClusterSim:
             per_instance_hbm=hbm,
             transfer_exposed_total=self.transfer_exposed,
             transfer_bytes_total=self.transfer_bytes,
+            instance_seconds=inst_seconds,
+            n_instances_peak=self.n_instances_peak,
+            n_instances_final=len(self.active_instances()),
+            migrations=self.migrations,
+            migration_bytes=self.migration_bytes,
+            pool_events=list(self.pool_events),
         )

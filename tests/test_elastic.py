@@ -1,0 +1,221 @@
+"""Elastic instance-pool behaviour: scaling, draining, role drift,
+migration, and end-to-end goodput on shifting traces."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import A100, BatchCostModel
+from repro.core.elastic import (
+    DrainInstance, ElasticConfig, InstanceStat, MigrateWork, PoolController,
+    ScaleUp, SetRoleBias,
+)
+from repro.core.local_scheduler import LocalScheduler
+from repro.data import burst_trace, diurnal_trace, phase_shift_trace
+from repro.sim import (
+    ClusterSim, DynaServePolicy, ElasticDynaServePolicy, SimConfig,
+)
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+def _stat(iid, drain, n_queued=0, draining=False, bias=0.0,
+          pf=0, dc=0):
+    return InstanceStat(iid, drain, pf, dc, n_queued, draining, bias)
+
+
+# ---------------------------------------------------------------------------
+# controller unit behaviour
+# ---------------------------------------------------------------------------
+def test_controller_scales_up_on_high_load():
+    c = PoolController(ElasticConfig(min_instances=1, max_instances=4))
+    acts = c.decide([_stat(0, 5.0, n_queued=20)], now=1.0)
+    assert any(isinstance(a, ScaleUp) for a in acts)
+
+
+def test_controller_respects_max_instances():
+    c = PoolController(ElasticConfig(min_instances=1, max_instances=2))
+    stats = [_stat(0, 5.0, 20), _stat(1, 5.0, 20)]
+    acts = c.decide(stats, now=1.0)
+    assert not any(isinstance(a, ScaleUp) for a in acts)
+
+
+def test_controller_scales_down_idle_pool_but_respects_min():
+    c = PoolController(ElasticConfig(min_instances=2, max_instances=4))
+    stats = [_stat(i, 0.01) for i in range(3)]
+    acts = c.decide(stats, now=10.0)
+    drains = [a for a in acts if isinstance(a, DrainInstance)]
+    assert len(drains) == 1
+    # at the floor: no further drain
+    c2 = PoolController(ElasticConfig(min_instances=2, max_instances=4))
+    acts2 = c2.decide([_stat(i, 0.01) for i in range(2)], now=10.0)
+    assert not any(isinstance(a, DrainInstance) for a in acts2)
+
+
+def test_controller_scale_up_cooldown():
+    c = PoolController(ElasticConfig(max_instances=8, scale_up_cooldown=5.0))
+    s = [_stat(0, 9.0, 30)]
+    assert any(isinstance(a, ScaleUp) for a in c.decide(s, now=1.0))
+    assert not any(isinstance(a, ScaleUp) for a in c.decide(s, now=2.0))
+    assert any(isinstance(a, ScaleUp) for a in c.decide(s, now=7.0))
+
+
+def test_controller_migrates_on_imbalance():
+    c = PoolController(ElasticConfig(min_instances=2))
+    # keep the smoothed load inside the deadband so no scaling fires
+    stats = [_stat(0, 1.2, n_queued=12), _stat(1, 0.05, n_queued=0)]
+    acts = c.decide(stats, now=1.0)
+    mig = [a for a in acts if isinstance(a, MigrateWork)]
+    assert mig and mig[0].src == 0 and mig[0].dst == 1
+
+
+def test_controller_role_bias_follows_mix():
+    c = PoolController(ElasticConfig(min_instances=1))
+    for _ in range(50):
+        c.observe_arrival(8192, 32)        # AzureCode-like: prefill-heavy
+    assert c.target_bias > 0.8
+    acts = c.decide([_stat(0, 1.0, 4)], now=1.0)
+    biases = [a for a in acts if isinstance(a, SetRoleBias)]
+    assert biases and biases[0].bias > 0
+    for _ in range(200):
+        c.observe_arrival(219, 1467)       # reasoning-like: decode-heavy
+    assert c.target_bias < -0.5
+
+
+def test_role_bias_changes_batch_composition(cost):
+    """Role drift must actually change what the local scheduler admits."""
+    neutral = LocalScheduler(cost, 0.100)
+    m0 = neutral.max_prefill_allowed(ctx=2048, dnum=8)
+    pf_heavy = LocalScheduler(cost, 0.100)
+    pf_heavy.set_role_bias(1.0)
+    dc_heavy = LocalScheduler(cost, 0.100)
+    dc_heavy.set_role_bias(-1.0)
+    assert pf_heavy.max_prefill_allowed(ctx=2048, dnum=8) > m0
+    assert dc_heavy.max_prefill_allowed(ctx=2048, dnum=8) < m0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end simulator behaviour
+# ---------------------------------------------------------------------------
+def _elastic(cost, lo=1, hi=4, **kw):
+    return ElasticDynaServePolicy(
+        cost, elastic=ElasticConfig(min_instances=lo, max_instances=hi, **kw))
+
+
+def test_scale_up_under_burst(cost):
+    reqs = burst_trace(0.6, 40, seed=0, bursts=((0.25, 0.25, 6.0),))
+    sim = ClusterSim(cost, _elastic(cost), SimConfig(n_instances=1))
+    m = sim.run(reqs)
+    assert m.completed == len(reqs)
+    assert m.n_instances_peak > 1
+    assert any("attach" in e or "revive" in e for _, e in m.pool_events)
+
+
+def test_drain_without_dropping_requests(cost):
+    """A front-loaded burst then a quiet tail: the pool must shrink back
+    down and still complete every request with all tokens."""
+    reqs = burst_trace(0.4, 50, seed=1, bursts=((0.05, 0.2, 8.0),))
+    sim = ClusterSim(cost, _elastic(cost), SimConfig(n_instances=1))
+    m = sim.run(reqs)
+    assert m.completed == len(reqs)
+    assert m.tokens_total == sum(r.D for r in reqs)
+    assert any("retire" in e for _, e in m.pool_events)
+    assert m.n_instances_final < m.n_instances_peak
+    # consolidation saves instance-seconds vs holding the peak throughout
+    assert m.instance_seconds < m.n_instances_peak * m.duration
+
+
+def test_elastic_goodput_at_least_fixed_on_shifting_trace(cost):
+    reqs = phase_shift_trace(2.0, 40, seed=0)
+    g_fix = ClusterSim(cost, DynaServePolicy(cost),
+                       SimConfig(n_instances=1)).run(reqs).goodput
+    g_el = ClusterSim(cost, _elastic(cost), SimConfig(n_instances=1)) \
+        .run(reqs).goodput
+    assert g_el >= g_fix
+
+
+def test_migration_preserves_work(cost):
+    """Force an imbalanced pool and verify migrated micro-requests still
+    finish (token conservation) and pay transfer bytes when they carry KV."""
+    reqs = diurnal_trace(2.0, 30, seed=2, floor=0.05)
+    pol = _elastic(cost, rebalance_ratio=1.5, rebalance_slack=0.1,
+                   migrate_max=8)
+    sim = ClusterSim(cost, pol, SimConfig(n_instances=2))
+    m = sim.run(reqs)
+    assert m.completed == len(reqs)
+    assert m.tokens_total == sum(r.D for r in reqs)
+
+
+def test_shifting_traces_are_reproducible_and_shaped():
+    a = diurnal_trace(2.0, 30, seed=7)
+    b = diurnal_trace(2.0, 30, seed=7)
+    assert [r.rid for r in a] == [r.rid for r in b]
+    assert [r.P for r in a] == [r.P for r in b]
+    # diurnal: middle third denser than first third (valley -> peak)
+    t = np.array([r.arrival for r in diurnal_trace(4.0, 60, seed=0)])
+    assert ((t > 20) & (t < 40)).sum() > (t < 20).sum()
+    # phases: early phase decode-heavy, second phase prefill-heavy
+    ph = phase_shift_trace(3.0, 40, seed=0,
+                           phases=("mini_reasoning", "azure_code"))
+    first = [r for r in ph if r.arrival < 20]
+    second = [r for r in ph if r.arrival >= 20]
+    assert np.mean([r.D / r.P for r in first]) > \
+        np.mean([r.D / r.P for r in second])
+
+
+# ---------------------------------------------------------------------------
+# engine-level elastic lifecycle (real JAX engines, reduced model)
+# ---------------------------------------------------------------------------
+def test_engine_attach_drain_detach():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.cluster import ServingCluster
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cluster = ServingCluster(cfg, params, n_instances=2, max_len=96)
+    rng = np.random.default_rng(0)
+    reqs = [cluster.submit(rng.integers(0, cfg.vocab_size, n), 4)
+            for n in (24, 16)]
+    # attach mid-flight, then drain an original engine
+    new_eid = cluster.attach_instance()
+    assert new_eid in cluster.engines
+    reqs.append(cluster.submit(rng.integers(0, cfg.vocab_size, 12), 4))
+    cluster.drain_instance(0)
+    cluster.run_until_done(reqs)
+    assert all(len(r.generated) >= 4 for r in reqs)
+    # the drained engine finished its work (incl. pending handoffs) and
+    # was detached; nothing is left marked draining
+    assert 0 not in cluster.engines
+    assert cluster.draining == set()
+
+
+def test_engine_drain_last_engine_is_cancelled():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.cluster import ServingCluster
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cluster = ServingCluster(cfg, params, n_instances=1, max_len=96)
+    cluster.drain_instance(0)
+    r = cluster.submit(np.arange(16, dtype=np.int64) % cfg.vocab_size, 4)
+    cluster.run_until_done([r])
+    assert len(r.generated) >= 4
+    assert 0 in cluster.engines           # last engine never detaches
+    assert cluster.draining == set()      # its drain was cancelled
+
+
+def test_fixed_policies_unchanged_by_pool_plumbing(cost):
+    """Fixed-N policies must see identical behaviour (no pool events)."""
+    from repro.data import generate_trace
+    reqs = generate_trace("burstgpt", 2.0, 20, seed=3)
+    sim = ClusterSim(cost, DynaServePolicy(cost), SimConfig(n_instances=2))
+    m = sim.run(reqs)
+    assert m.completed == len(reqs)
+    assert m.pool_events == []
+    assert m.instance_seconds == pytest.approx(2 * m.duration)

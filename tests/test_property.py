@@ -1,6 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: pip install -e '.[test]'")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_config
 from repro.core import (
