@@ -25,6 +25,7 @@ MODULES = [
     "kv_transfer_overlap",
     "ablation_split",
     "elastic_shift",
+    "online_serving",
     "kernel_bench",
     "roofline",
 ]

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.request import INTERACTIVE
 from repro.data.tokens import token_batches
 from repro.engine.cluster import ServingCluster
 from repro.models.model import init_params
@@ -37,11 +38,14 @@ def main():
 
     cluster = ServingCluster(cfg, params, n_instances=2, max_len=160)
     rng = np.random.default_rng(0)
-    reqs = [cluster.submit(rng.integers(0, cfg.vocab_size, int(n)), 12)
-            for n in (64, 40, 24, 48)]
-    cluster.run_until_done(reqs)
-    for r in reqs:
-        print(f"  {r.req.rid}: P={r.req.P} generated={r.generated}")
+    # streaming API: generate() returns a handle; iterating it pumps the
+    # serving event loop and yields tokens as they are sampled
+    handles = [cluster.session.generate(
+        rng.integers(0, cfg.vocab_size, int(n)), 12, slo=INTERACTIVE)
+        for n in (64, 40, 24, 48)]
+    for h in handles:
+        toks = list(h)
+        print(f"  {h.rid}: P={h.req.P} [{h.state}] generated={toks}")
     print(f"KV handoff between instances: {cluster.kv_bytes_moved} bytes")
 
 

@@ -1,9 +1,7 @@
-"""End-to-end serving driver (the paper's kind of workload): batched
-requests with skewed prefill/decode mixes served by DynaServe's full
-stack — global binary-search splitting (Algorithm 1), per-instance batch
-composition, real cross-instance chunked KV/state handoff — on real JAX
-engines.  Also runs the same batch in colocation mode and verifies the
-generations are token-identical (scheduling must never change results).
+"""Online serving on real JAX engines through the ``ServeSession`` API:
+streaming token delivery, SLO classes, mid-flight cancellation — with a
+correctness check that scheduling never changes generations (the same
+batch served in colocation mode is token-identical).
 
   PYTHONPATH=src python examples/serve_cluster.py [--arch mamba2-780m]
 """
@@ -18,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.request import BATCH, INTERACTIVE, RequestState
 from repro.engine.cluster import ServingCluster
 from repro.models.model import init_params
 
@@ -25,7 +24,7 @@ from repro.models.model import init_params
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -39,35 +38,45 @@ def main():
             specs.append((int(rng.integers(48, 96)), 6))    # prefill-heavy
         else:
             specs.append((int(rng.integers(8, 20)), 24))    # decode-heavy
+    prompts = [np.random.default_rng(7 + i).integers(0, cfg.vocab_size, p)
+               for i, (p, _) in enumerate(specs)]
 
     def serve(split):
         cluster = ServingCluster(cfg, params, n_instances=2,
-                                 n_slots=args.requests + 2,
+                                 n_slots=2 * args.requests,
                                  max_len=192, split=split)
         t0 = time.time()
-        reqs = [cluster.submit(rng_local.integers(0, cfg.vocab_size, p), d)
-                for (p, d), rng_local in
-                zip(specs, [np.random.default_rng(7 + i)
-                            for i in range(len(specs))])]
-        cluster.run_until_done(reqs)
-        return reqs, time.time() - t0, cluster
+        handles = [cluster.session.generate(
+            prompts[i], d, rid=f"req{i}",
+            slo=INTERACTIVE if i % 2 else BATCH)
+            for i, (_, d) in enumerate(specs)]
+        outs = [list(h) for h in handles]       # stream every request
+        return handles, outs, time.time() - t0, cluster
 
-    reqs_dyn, dt_dyn, cl = serve(split=True)
-    reqs_col, dt_col, _ = serve(split=False)
+    hs_dyn, outs_dyn, dt_dyn, cl = serve(split=True)
+    hs_col, outs_col, dt_col, _ = serve(split=False)
 
-    toks = sum(len(r.generated) for r in reqs_dyn)
-    print(f"arch={cfg.name} requests={len(reqs_dyn)} output_tokens={toks}")
+    toks = sum(len(t) for t in outs_dyn)
+    print(f"arch={cfg.name} requests={len(hs_dyn)} output_tokens={toks}")
     print(f"DynaServe (2 unified instances): {dt_dyn:.2f}s wall "
           f"({toks/dt_dyn:.1f} tok/s CPU), KV handoff "
           f"{cl.kv_bytes_moved/1024:.1f} KiB")
     print(f"Colocation  (no splitting):      {dt_col:.2f}s wall")
-    same = all(a.generated == b.generated
-               for a, b in zip(reqs_dyn, reqs_col))
+    same = all(a == b for a, b in zip(outs_dyn, outs_col))
     print("generations identical across scheduling modes:", same)
     assert same
-    for r in reqs_dyn[:4]:
-        print(f"  {r.req.rid}: P={r.req.P} D={r.max_new_tokens} "
-              f"-> {r.generated[:6]}...")
+    for h, toks_h in list(zip(hs_dyn, outs_dyn))[:4]:
+        print(f"  {h.rid}: P={h.req.P} slo={h.req.slo.name} "
+              f"-> {toks_h[:6]}...")
+
+    # mid-flight cancellation frees slots and aborts pending handoffs
+    cluster = ServingCluster(cfg, params, n_instances=2, max_len=192)
+    h = cluster.session.generate(prompts[0], 24, rid="cancelme")
+    for i, _tok in enumerate(h):
+        if i == 2:
+            h.cancel()
+    print(f"cancelled after {len(h.tokens)} tokens: state={h.state}")
+    assert h.state == RequestState.CANCELLED
 
 
 if __name__ == "__main__":

@@ -1,7 +1,15 @@
 """DynaServe's primary contribution: Adaptive Request Partitioning and
-Scheduling (APS) — micro-requests, the two-level scheduler, and chunked
-KV transfer."""
-from repro.core.request import Request, MicroRequest, split_request  # noqa: F401
+Scheduling (APS) — micro-requests, the two-level scheduler, chunked KV
+transfer, and the online serving session that drives them on either
+backend (simulator or real JAX engines)."""
+from repro.core.request import (  # noqa: F401
+    BATCH, INTERACTIVE, MicroRequest, Request, RequestState, SLO_CLASSES,
+    SLOClass, STANDARD, split_request,
+)
+from repro.core.session import (  # noqa: F401
+    Backend, ServeHandle, ServeSession, SessionConfig, SessionMetrics,
+    SessionStallError,
+)
 from repro.core.costmodel import HardwareSpec, A100, TPU_V5E, BatchCostModel  # noqa: F401
 from repro.core.local_scheduler import LocalScheduler, ProfileTable  # noqa: F401
 from repro.core.predictor import ExecutionPredictor, QueuedWork  # noqa: F401

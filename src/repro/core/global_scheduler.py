@@ -106,6 +106,9 @@ class GlobalScheduler:
         t0 = time.perf_counter()
         D = r.D_pred + self.margin_tokens
         r_eff = dataclasses.replace(r, predicted_decode=D)
+        # the request's SLO class (when attached) sizes the predictor's
+        # virtual batches instead of the scheduler-wide default budget
+        slo = r.slo.tbt if r.slo is not None else None
         ia, ib = self.pick_pair(instances)
         qa, qb = instances[ia].queue, instances[ib].queue
         same_instance = ia == ib
@@ -117,7 +120,8 @@ class GlobalScheduler:
         # the instance to itself — run the request whole
         if same_instance:
             whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
-            t1 = self.predictor.completion_time(qa, self._work_of(whole))
+            t1 = self.predictor.completion_time(qa, self._work_of(whole),
+                                                slo=slo)
             return Placement(whole, None, ia, None, 1.0, t1, 0.0, 0,
                              time.perf_counter() - t0)
 
@@ -125,8 +129,10 @@ class GlobalScheduler:
         if not qa and not qb:
             phi = r_eff.P / r_eff.L
             alpha, beta = split_request(r_eff, phi)
-            t1 = self.predictor.completion_time(qa, self._work_of(alpha) if alpha else None)
-            t2 = self.predictor.completion_time(qb, self._work_of(beta) if beta else None)
+            t1 = self.predictor.completion_time(
+                qa, self._work_of(alpha) if alpha else None, slo=slo)
+            t2 = self.predictor.completion_time(
+                qb, self._work_of(beta) if beta else None, slo=slo)
             return Placement(alpha, beta, ia if alpha else None,
                              ib if beta else None, phi, t1, t2, 0,
                              time.perf_counter() - t0)
@@ -139,9 +145,9 @@ class GlobalScheduler:
             probes += 1
             alpha, beta = split_request(r_eff, phi)
             t1 = self.predictor.completion_time(
-                qa, self._work_of(alpha) if alpha else None)
+                qa, self._work_of(alpha) if alpha else None, slo=slo)
             t2 = self.predictor.completion_time(
-                qb, self._work_of(beta) if beta else None)
+                qb, self._work_of(beta) if beta else None, slo=slo)
             gap = abs(t1 - t2)
             if best is None or gap < best[0]:
                 best = (gap, phi, alpha, beta, t1, t2)
@@ -160,7 +166,8 @@ class GlobalScheduler:
         # a handoff gap in the TBT stream, so take it only when it
         # clearly beats running the request whole on the idler instance.
         whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
-        t_whole = self.predictor.completion_time(qa, self._work_of(whole))
+        t_whole = self.predictor.completion_time(qa, self._work_of(whole),
+                                                 slo=slo)
         if t_whole <= max(t1, t2) * (1.0 + self.split_gain_threshold):
             return Placement(whole, None, ia, None, 1.0, t_whole, 0.0,
                              probes, time.perf_counter() - t0)

@@ -53,12 +53,14 @@ class PrefillWork:
     rid: str
     remaining: int              # prefill tokens left
     ctx: int                    # tokens already cached (position of chunk)
+    deadline: Optional[float] = None  # TTFT deadline (arrival + SLO ttft)
 
 
 @dataclasses.dataclass
 class DecodeWork:
     rid: str
     ctx: int                    # current context length
+    tbt: Optional[float] = None  # owning request's SLO-class TBT target
 
 
 @dataclasses.dataclass
@@ -108,10 +110,21 @@ class LocalScheduler:
         ctx = int(sum(d.ctx for d in plan.decodes) / max(1, plan.dnum))
         self.profile.record(plan.prefill_tokens, ctx, plan.dnum, measured)
 
-    def max_prefill_allowed(self, ctx: int, dnum: int, p_ctx: int = 0) -> int:
+    def effective_slo(self, decodes: Sequence[DecodeWork]) -> float:
+        """TBT budget for one batch: the tightest SLO-class target among
+        the co-batched decode streams (every decode in the batch pays
+        the full batch latency), falling back to the instance default
+        for unclassed work or prefill-only batches."""
+        targets = [d.tbt if d.tbt is not None else self.slo for d in decodes]
+        if not targets:
+            return self.slo
+        return min(targets)
+
+    def max_prefill_allowed(self, ctx: int, dnum: int, p_ctx: int = 0,
+                            slo: Optional[float] = None) -> int:
         if not self.slo_aware:
             return self._biased(self.static_chunk or 2048)
-        slo = self.slo * self.slo_margin
+        slo = (slo if slo is not None else self.slo) * self.slo_margin
         # profile-table refinement: probe geometric plen candidates and
         # take the largest whose recorded latency fits the SLO; fall back
         # to the analytic inversion where the table is cold.
@@ -140,9 +153,17 @@ class LocalScheduler:
         decodes = list(decode_queue[: self.max_batch_requests])
         d_ctx = int(sum(d.ctx for d in decodes) / max(1, len(decodes)))
         p_ctx = max((w.ctx for w in prefill_queue), default=0)
-        M = self.max_prefill_allowed(d_ctx, len(decodes), p_ctx=p_ctx)
+        M = self.max_prefill_allowed(d_ctx, len(decodes), p_ctx=p_ctx,
+                                     slo=self.effective_slo(decodes))
         grants: List[Tuple[PrefillWork, int]] = []
         budget = M
+        # earliest-TTFT-deadline first; unclassed work keeps FCFS order
+        # (stable sort, None sorts last at equal arrival position)
+        if any(w.deadline is not None for w in prefill_queue):
+            prefill_queue = sorted(
+                prefill_queue,
+                key=lambda w: w.deadline if w.deadline is not None
+                else float("inf"))
         for w in prefill_queue:
             if budget <= 0 or len(decodes) + len(grants) >= self.max_batch_requests:
                 break

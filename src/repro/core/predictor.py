@@ -37,8 +37,13 @@ class ExecutionPredictor:
         self.slo = slo
 
     # ------------------------------------------------------------------
-    def drain_time(self, queue: Sequence[QueuedWork], now: float = 0.0) -> float:
-        """Predicted time until the instance finishes all queued work."""
+    def drain_time(self, queue: Sequence[QueuedWork], now: float = 0.0,
+                   slo: Optional[float] = None) -> float:
+        """Predicted time until the instance finishes all queued work.
+
+        ``slo`` overrides the per-pass TBT budget used to size virtual
+        batches (the arriving request's SLO class, when it has one).
+        """
         if not queue:
             return 0.0
         # Per-pass prefill budget under the local scheduler's SLO control.
@@ -50,7 +55,9 @@ class ExecutionPredictor:
 
         # decode start pass of each request (FCFS prefill drain at M/pass)
         n = len(queue)
-        M = max(1, self.cost.max_prefill_tokens(self.slo, min(n, 8), int(avg_ctx)))
+        budget_slo = slo if slo is not None else self.slo
+        M = max(1, self.cost.max_prefill_tokens(budget_slo, min(n, 8),
+                                                int(avg_ctx)))
         starts: List[int] = []
         cum = 0
         for q in queue:
@@ -78,8 +85,9 @@ class ExecutionPredictor:
 
     def completion_time(self, queue: Sequence[QueuedWork],
                         new: Optional[QueuedWork] = None,
-                        now: float = 0.0) -> float:
+                        now: float = 0.0,
+                        slo: Optional[float] = None) -> float:
         q = list(queue)
         if new is not None:
             q.append(new)
-        return self.drain_time(q, now)
+        return self.drain_time(q, now, slo=slo)

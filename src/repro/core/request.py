@@ -17,7 +17,55 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """Per-request latency targets the schedulers read.
+
+    ``ttft`` bounds time-to-first-token (admission control rejects a
+    request whose predicted queue wait already exceeds it); ``tbt``
+    bounds time-between-tokens (the local scheduler sizes mixed batches
+    so every co-batched decode stream stays under the *tightest* target
+    in the batch, and the global scheduler probes split points against
+    it).  ``float("inf")`` disables the corresponding bound.
+    """
+    name: str
+    ttft: float
+    tbt: float
+
+    @property
+    def admits_always(self) -> bool:
+        return math.isinf(self.ttft)
+
+
+INTERACTIVE = SLOClass("interactive", ttft=0.5, tbt=0.100)
+STANDARD = SLOClass("standard", ttft=2.0, tbt=0.250)
+BATCH = SLOClass("batch", ttft=float("inf"), tbt=1.0)
+
+SLO_CLASSES: Dict[str, SLOClass] = {
+    c.name: c for c in (INTERACTIVE, STANDARD, BATCH)
+}
+
+
+class RequestState:
+    """Lifecycle of an online request (values order-comparable by phase).
+
+    QUEUED -> ADMITTED -> RUNNING_ALPHA -> HANDOFF -> RUNNING_BETA -> DONE
+    with REJECTED (admission control) and CANCELLED (client abort) as
+    terminal exits from any non-terminal state.
+    """
+    QUEUED = "queued"
+    ADMITTED = "admitted"
+    RUNNING_ALPHA = "running_alpha"
+    HANDOFF = "handoff"
+    RUNNING_BETA = "running_beta"
+    DONE = "done"
+    CANCELLED = "cancelled"
+    REJECTED = "rejected"
+
+    TERMINAL = frozenset({DONE, CANCELLED, REJECTED})
 
 
 @dataclasses.dataclass
@@ -27,6 +75,27 @@ class Request:
     prompt_len: int                 # P
     decode_len: int                 # D (ground truth; scheduler sees predicted)
     predicted_decode: Optional[int] = None
+    slo: Optional[SLOClass] = None
+    state: str = RequestState.QUEUED
+    state_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to(self, state: str, now: float) -> None:
+        """Transition the lifecycle; terminal states are sticky."""
+        if self.state in RequestState.TERMINAL:
+            return
+        self.state = state
+        self.state_times.setdefault(state, now)
+
+    def reset_lifecycle(self) -> None:
+        """Back to QUEUED with no history — a session resubmitting this
+        request (e.g. the same trace replayed through several arms)
+        starts a fresh life instead of inheriting a terminal state."""
+        self.state = RequestState.QUEUED
+        self.state_times = {}
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in RequestState.TERMINAL
 
     @property
     def P(self) -> int:

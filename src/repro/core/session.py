@@ -1,0 +1,1032 @@
+"""One serving session, two substrates (the online serving API).
+
+``ServeSession`` owns the full request lifecycle — arrival, admission
+control, placement (global scheduler via the policy), per-instance batch
+composition (local scheduler), KV handoff, streaming token delivery,
+cancellation, completion — as ONE event loop.  What used to be written
+twice (``sim.simulator.ClusterSim`` and ``engine.cluster.ServingCluster``
+each had their own arrival→place→batch→handoff→finish loop) is now a
+single driver parameterised by a ``Backend``:
+
+* ``repro.sim.simulator.SimBackend`` — virtual clock, per-batch latency
+  from the analytic ``BatchCostModel``; completions are *deferred*
+  events, so concurrent instances overlap in simulated time.
+* ``repro.engine.backend.EngineBackend`` — wall clock, real JAX engines;
+  batches execute synchronously and emit real sampled tokens.
+
+Because the policies (``repro.sim.policies``) only ever talk to the
+session surface (``instances``, ``release_beta``, ``add_instance`` …),
+the two-level scheduler, the elastic pool controller, and every policy
+run byte-identically against either backend.
+
+Online API::
+
+    session = ServeSession(backend, policy, SessionConfig(...))
+    handle = session.generate(prompt, max_new_tokens=64, slo=INTERACTIVE)
+    for token in handle:          # streams as the event loop advances
+        ...
+    session.cancel(handle.rid)    # frees slots, aborts pending handoffs
+
+Offline/trace API (open-loop arrival-driven, both backends)::
+
+    metrics = session.run(trace)  # SessionMetrics incl. per-SLO-class
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import time as _time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import BatchCostModel, WorkItem
+from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
+from repro.core.predictor import ExecutionPredictor, QueuedWork
+from repro.core.request import (
+    MicroRequest, Request, RequestState, SLOClass,
+)
+
+
+def queued_view(inst: "InstanceState") -> List[QueuedWork]:
+    """Project an instance's queues into the predictor's ``QueuedWork``
+    terms — the one view both the policies (global scheduling) and the
+    session (admission control) consume."""
+    out = []
+    for m in inst.prefill_q:
+        out.append(QueuedWork(m.rid, m.prefill_remaining,
+                              m.decode_remaining, m.pos))
+    for m in inst.decode_q:
+        out.append(QueuedWork(m.rid, 0, m.decode_remaining, m.pos))
+    return out
+
+
+class SessionStallError(RuntimeError):
+    """The event loop reached a state where open requests exist but no
+    instance can make progress (e.g. a beta whose KV handoff will never
+    arrive, or work stranded on a fully-draining pool).  Raised instead
+    of busy-looping or silently returning incomplete results."""
+
+
+# ---------------------------------------------------------------------------
+# Runtime state shared by both backends
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(eq=False)
+class MicroState:
+    """Runtime state of one micro-request on an instance."""
+    mr: MicroRequest
+    prefill_remaining: int
+    decode_remaining: int
+    pos: int                       # next absolute token position
+    ready: float = 0.0
+    iid: int = -1
+    cancelled: bool = False
+
+    @property
+    def rid(self) -> str:
+        return self.mr.rid
+
+
+class InstanceState:
+    """One pool member: queues + the local scheduler composing its
+    batches.  The *execution substrate* behind it lives in the backend."""
+
+    def __init__(self, iid: int, scheduler: LocalScheduler,
+                 role: str = "unified", spawned_at: float = 0.0):
+        self.iid = iid
+        self.scheduler = scheduler
+        self.role = role           # unified | prefill | decode
+        self.prefill_q: List[MicroState] = []
+        self.decode_q: List[MicroState] = []
+        self.busy = False
+        self.in_flight: set = set()    # micros inside the running batch
+        # elastic lifecycle: active segments [(start, end|None), ...]
+        self.draining = False
+        self.retired = False
+        self.segments: List[List[Optional[float]]] = [[spawned_at, None]]
+        # accounting
+        self.busy_time = 0.0
+        self.flops_done = 0.0
+        self.bytes_done = 0.0
+        self.kv_tokens_resident = 0
+
+    @property
+    def role_bias(self) -> float:
+        return getattr(self.scheduler, "role_bias", 0.0)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.prefill_q) + len(self.decode_q)
+
+    def has_work(self, now: float) -> bool:
+        return any(m.ready <= now for m in self.prefill_q) or \
+            any(m.ready <= now for m in self.decode_q)
+
+    def active_seconds(self, horizon: float) -> float:
+        return sum((end if end is not None else horizon) - start
+                   for start, end in self.segments)
+
+
+@dataclasses.dataclass
+class ReqState:
+    req: Request
+    # effective arrival: equals req.arrival except in closed-loop wall-
+    # clock replay, where the request "arrives" when dispatched (the
+    # shared trace object is never mutated)
+    arrival: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    ttft: Optional[float] = None
+    done_at: Optional[float] = None
+    micro_done: int = 0
+    n_micro: int = 1
+    rejected: bool = False
+    cancelled: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ExecResult:
+    """Outcome of one batch on one instance."""
+    latency: float
+    tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
+    deferred: bool = True   # True: completion fires at now+latency (sim)
+
+
+class Backend:
+    """Execution substrate under a ``ServeSession``.
+
+    ``virtual_clock`` backends model time (completions are deferred
+    events); real backends execute synchronously on the wall clock and
+    return actual sampled tokens (``emits_tokens``).  ``max_chunk``
+    caps per-pass prefill grants (e.g. the engine's padding buckets).
+    """
+    virtual_clock: bool = True
+    emits_tokens: bool = False
+    max_chunk: Optional[int] = None
+    cost: BatchCostModel
+
+    def spawn(self, iid: int) -> None:
+        """Bring up the substrate for a (new or revived) instance."""
+
+    def retire(self, iid: int) -> None:
+        """Tear down a drained instance's substrate."""
+
+    def register(self, req: Request, prompt=None) -> None:
+        """Make the request's inputs available (prompt tokens etc.)."""
+
+    def forget(self, rid: str) -> None:
+        """Drop per-request records of a terminal request."""
+
+    def on_place(self, iid: int, micro: MicroState) -> bool:
+        """Reserve per-instance resources (a KV slot).  False => the
+        instance cannot take the micro (admission rejects the request)."""
+        return True
+
+    def release(self, micro: MicroState) -> None:
+        """Free the micro's resources (slot, cached state)."""
+
+    def execute(self, inst: InstanceState,
+                grants: Sequence[Tuple[MicroState, int]],
+                decs: Sequence[MicroState]) -> ExecResult:
+        raise NotImplementedError
+
+    def do_handoff(self, src: MicroState, dst: MicroState) -> float:
+        """Move KV/state for a real backend; returns bytes moved."""
+        return 0.0
+
+    def on_migrate(self, micro: MicroState, src_iid: int,
+                   dst_iid: int) -> bool:
+        """Re-home a queued micro's resources.  False => cannot move."""
+        return True
+
+
+# ---------------------------------------------------------------------------
+# Config + metrics
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SessionConfig:
+    n_instances: int = 2
+    slo: float = 0.100             # default TBT target (unclassed work)
+    max_sim_time: float = 10_000.0
+    warmup: float = 5.0
+    hbm_bytes: float = 80e9        # A100-80G, for utilization accounting
+    record_util: bool = False
+    # --- online serving ---
+    admission: bool = False        # load-shed when predicted TTFT busts SLO
+    open_loop: bool = True         # honor arrival timestamps (wall-clock
+    #                                backends sleep until each arrival)
+    default_slo: Optional[SLOClass] = None   # attached to unclassed requests
+    # Long-lived sessions: drop per-request state (req_states entry,
+    # handle registration, backend prompt/token records) as soon as a
+    # request turns terminal, so memory stays bounded at open-request
+    # count.  Leave True for run()/metrics(), which aggregate over the
+    # retained states at the end.
+    retain_finished: bool = True
+
+
+@dataclasses.dataclass
+class ClassReport:
+    """Per-SLO-class serving quality (goodput measured at the API)."""
+    name: str
+    offered: int = 0
+    completed: int = 0
+    rejected: int = 0
+    cancelled: int = 0
+    tokens: int = 0
+    tokens_in_slo: int = 0
+    goodput: float = 0.0           # SLO-attaining tokens / second
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    tbt_p99: float = 0.0
+
+    @property
+    def attainment(self) -> float:
+        return self.tokens_in_slo / max(1, self.tokens)
+
+
+@dataclasses.dataclass
+class SessionMetrics:
+    duration: float
+    completed: int
+    offered: int
+    tokens_total: int
+    tokens_in_slo: int
+    tbts: np.ndarray
+    ttfts: np.ndarray
+    req_attained: float           # fraction of requests with max TBT <= SLO
+    scheduling_overheads: np.ndarray
+    per_instance_busy: List[float]
+    per_instance_mfu: List[float]
+    per_instance_hbm: List[float]
+    transfer_exposed_total: float
+    transfer_bytes_total: float
+    goodput_window: Optional[List[Tuple[float, float]]] = None
+    # elastic-pool accounting
+    instance_seconds: float = 0.0       # sum of per-instance active time
+    n_instances_peak: int = 0
+    n_instances_final: int = 0
+    migrations: int = 0
+    migration_bytes: float = 0.0
+    pool_events: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    # online serving
+    rejected: int = 0
+    cancelled: int = 0
+    per_class: Dict[str, ClassReport] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def goodput(self) -> float:
+        return self.tokens_in_slo / self.duration
+
+    @property
+    def throughput_tokens(self) -> float:
+        return self.tokens_total / self.duration
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.completed / self.duration
+
+    @property
+    def token_attainment(self) -> float:
+        return self.tokens_in_slo / max(1, self.tokens_total)
+
+    @property
+    def goodput_per_instance_second(self) -> float:
+        """SLO-attaining tokens per instance-second — the elastic pool's
+        efficiency metric (fixed-N pays for idle valleys)."""
+        return self.tokens_in_slo / max(1e-9, self.instance_seconds)
+
+    def p99_tbt(self) -> float:
+        return float(np.percentile(self.tbts, 99)) if len(self.tbts) else 0.0
+
+    def p50_tbt(self) -> float:
+        return float(np.percentile(self.tbts, 50)) if len(self.tbts) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Streaming handle
+# ---------------------------------------------------------------------------
+class ServeHandle:
+    """Client-side view of one in-flight request.
+
+    Iterating yields tokens incrementally, pumping the session's event
+    loop as needed (real backends yield sampled token ids; the simulator
+    yields output positions).  ``state`` tracks the request lifecycle.
+    """
+
+    def __init__(self, session: "ServeSession", req: Request):
+        self._session = session
+        self.req = req
+        self.tokens: List[int] = []
+
+    @property
+    def rid(self) -> str:
+        return self.req.rid
+
+    @property
+    def state(self) -> str:
+        return self.req.state
+
+    @property
+    def done(self) -> bool:
+        return self.req.terminal
+
+    # compat alias: the old engine ``LiveRequest.generated``
+    @property
+    def generated(self) -> List[int]:
+        return self.tokens
+
+    def cancel(self) -> bool:
+        return self._session.cancel(self.rid)
+
+    def result(self) -> List[int]:
+        """Block until terminal; returns the full token list."""
+        for _ in self:
+            pass
+        return self.tokens
+
+    def __iter__(self):
+        sent = 0
+        while True:
+            while sent < len(self.tokens):
+                yield self.tokens[sent]
+                sent += 1
+            if self.req.terminal:
+                return
+            if not self._session._pump():
+                if self.req.terminal:
+                    continue
+                if self._session._truncated:
+                    return          # time horizon reached, not a deadlock
+                raise SessionStallError(
+                    f"request {self.rid} stalled in state {self.req.state} "
+                    f"with no pending events")
+
+
+# ---------------------------------------------------------------------------
+# The shared driver
+# ---------------------------------------------------------------------------
+class ServeSession:
+    """The one arrival→admit→place→batch→handoff→finish event loop.
+
+    Exposes the pool surface the policies drive (``instances``,
+    ``active_instances``, ``add_instance``, ``drain_instance``,
+    ``migrate``, ``release_beta``) so ``repro.sim.policies`` run
+    unmodified on either backend.
+    """
+
+    def __init__(self, backend: Backend, policy,
+                 cfg: Optional[SessionConfig] = None):
+        self.backend = backend
+        self.policy = policy
+        self.cfg = cfg or SessionConfig()
+        self.cost = backend.cost
+        self.predictor = ExecutionPredictor(self.cost, self.cfg.slo)
+        self.instances: List[InstanceState] = []
+        for i in range(self.cfg.n_instances):
+            backend.spawn(i)
+            self.instances.append(InstanceState(
+                i, policy.make_local_scheduler(i, self.cost, self.cfg.slo),
+                policy.role_of(i, self.cfg.n_instances)))
+        self.req_states: Dict[str, ReqState] = {}
+        self.handles: Dict[str, ServeHandle] = {}
+        self._rid_seq = itertools.count()
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self._arrivals_left = 0
+        self._open_requests = 0
+        self._pool_armed = False
+        self._truncated = False
+        self.now = 0.0
+        self._t0: Optional[float] = None   # wall-clock epoch (real backends)
+        self.transfer_exposed = 0.0
+        self.transfer_bytes = 0.0
+        self.migrations = 0
+        self.migration_bytes = 0.0
+        self.n_instances_peak = self.cfg.n_instances
+        self.pool_events: List[Tuple[float, str]] = []
+        self.sched_overheads: List[float] = []
+
+    # ---------------- event plumbing ----------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._events, (t, self._seq, kind, payload))
+
+    def _wall(self) -> float:
+        if self._t0 is None:
+            self._t0 = _time.monotonic()
+        return _time.monotonic() - self._t0
+
+    def _advance(self, t: float) -> None:
+        if self.backend.virtual_clock:
+            self.now = t
+            return
+        wall = self._wall()
+        if self.cfg.open_loop and t > wall:
+            _time.sleep(t - wall)
+            wall = self._wall()
+        self.now = max(self.now, wall)
+
+    def _pump(self) -> bool:
+        """Dispatch one event; False when the queue is empty (or the
+        time horizon is exceeded)."""
+        if not self._events:
+            return False
+        t, _, kind, payload = heapq.heappop(self._events)
+        if t > self.cfg.max_sim_time:
+            # past the configured horizon: leave the event queue intact
+            # so truncation stays distinguishable from a genuine stall
+            self._seq += 1
+            heapq.heappush(self._events, (t, self._seq, kind, payload))
+            self._truncated = True
+            return False
+        self._advance(t)
+        if kind == "arrival":
+            self._on_arrival(payload)
+        elif kind == "batch_done":
+            self._on_batch_done(payload)
+        elif kind == "kick":
+            if payload < len(self.instances):
+                self._maybe_start_batch(self.instances[payload])
+        elif kind == "pool":
+            self.policy.on_pool_check(self, self.now)
+            if self._arrivals_left > 0 or self._open_requests > 0:
+                self._push(self.now + payload, "pool", payload)
+            else:
+                self._pool_armed = False
+        return True
+
+    def _arm_pool(self) -> None:
+        interval = getattr(self.policy, "pool_interval", 0.0)
+        if (interval and hasattr(self.policy, "on_pool_check")
+                and not self._pool_armed):
+            self._pool_armed = True
+            self._push(self.now + interval, "pool", interval)
+
+    # ---------------- public API: trace replay ----------------
+    def run(self, requests: Sequence[Request]) -> SessionMetrics:
+        """Open-loop, arrival-driven replay of a request trace; returns
+        end-of-run metrics.  Identical semantics on both backends (a
+        wall-clock backend sleeps until each arrival when
+        ``cfg.open_loop``)."""
+        if not self.backend.virtual_clock:
+            self._wall()                     # start the clock
+        for r in requests:
+            self._push(r.arrival, "arrival", r)
+        self._arrivals_left += len(requests)
+        self._arm_pool()
+        while self._pump():
+            pass
+        if self._open_requests > 0 and not self._truncated:
+            stuck = [rid for rid, st in self.req_states.items()
+                     if st.done_at is None and not st.rejected
+                     and not st.cancelled]
+            raise SessionStallError(
+                f"no instance can make progress; {self._open_requests} open "
+                f"request(s) remain: {stuck[:8]}")
+        return self._metrics(requests)
+
+    # ---------------- public API: online serving ----------------
+    def generate(self, prompt=None, max_new_tokens: Optional[int] = None, *,
+                 prompt_len: Optional[int] = None,
+                 decode_len: Optional[int] = None,
+                 predicted_decode: Optional[int] = None,
+                 slo: Optional[SLOClass] = None,
+                 rid: Optional[str] = None) -> ServeHandle:
+        """Submit one request at the current time; returns a streaming
+        handle.  Real backends take ``prompt`` (token array) +
+        ``max_new_tokens``; the simulator takes ``prompt_len`` +
+        ``decode_len`` (lengths only)."""
+        if prompt is not None and prompt_len is None:
+            prompt_len = len(prompt)
+        if max_new_tokens is not None and decode_len is None:
+            decode_len = max_new_tokens
+        if prompt_len is None or decode_len is None:
+            raise ValueError("generate() needs prompt/prompt_len and "
+                             "max_new_tokens/decode_len")
+        rid = rid or f"req{next(self._rid_seq)}"
+        if not self.backend.virtual_clock:
+            self._advance(self._wall())
+        r = Request(rid, self.now, int(prompt_len), int(decode_len),
+                    predicted_decode=predicted_decode, slo=slo)
+        self.backend.register(r, prompt)
+        handle = ServeHandle(self, r)
+        self.handles[rid] = handle
+        self._arrivals_left += 1
+        self._arm_pool()
+        self._on_arrival(r)
+        return handle
+
+    def cancel(self, rid: str) -> bool:
+        """Abort an in-flight request: frees its slots/queued micros and
+        drops any pending beta handoff.  Returns False if the request is
+        unknown or already terminal."""
+        st = self.req_states.get(rid)
+        if st is None or st.req.terminal:
+            return False
+        st.req.to(RequestState.CANCELLED, self.now)
+        st.cancelled = True
+        for inst in self.instances:
+            for q in (inst.prefill_q, inst.decode_q):
+                for m in [m for m in q if m.mr.parent.rid == rid]:
+                    if m in inst.in_flight:
+                        m.cancelled = True    # reaped at batch completion
+                    else:
+                        q.remove(m)
+                        self.backend.release(m)
+            self._maybe_retire(inst)
+        if hasattr(self.policy, "on_cancel"):
+            self.policy.on_cancel(rid, self)
+        if st.done_at is None:
+            self._open_requests -= 1
+        self._finalize(st)
+        return True
+
+    def metrics(self) -> SessionMetrics:
+        return self._metrics([st.req for st in self.req_states.values()])
+
+    # ---------------- elastic pool lifecycle ----------------
+    def active_instances(self) -> List[InstanceState]:
+        return [i for i in self.instances if not i.draining and not i.retired]
+
+    def pool_instances(self) -> List[InstanceState]:
+        """Members still holding or receiving work (not yet retired)."""
+        return [i for i in self.instances if not i.retired]
+
+    def add_instance(self) -> InstanceState:
+        """Scale up: cancel an in-flight drain (warmest), revive a
+        retired member (profile table stays warm), or append a fresh
+        one — in that order, so the pool never exceeds its cap while a
+        drain is still completing."""
+        inst = next((i for i in self.instances
+                     if i.draining and not i.retired), None)
+        if inst is not None:
+            inst.draining = False
+            label = "undrain"
+        else:
+            inst = next((i for i in self.instances if i.retired), None)
+            if inst is not None:
+                inst.retired = False
+                inst.draining = False
+                inst.segments.append([self.now, None])
+                self.backend.spawn(inst.iid)
+                label = "revive"
+            else:
+                iid = len(self.instances)
+                self.backend.spawn(iid)
+                inst = InstanceState(
+                    iid,
+                    self.policy.make_local_scheduler(iid, self.cost,
+                                                     self.cfg.slo),
+                    self.policy.role_of(iid, iid + 1), spawned_at=self.now)
+                self.instances.append(inst)
+                label = "attach"
+        self.pool_events.append((self.now, f"{label} {inst.iid}"))
+        self.n_instances_peak = max(self.n_instances_peak,
+                                    len(self.active_instances()))
+        return inst
+
+    def drain_instance(self, iid: int) -> None:
+        """Scale down: stop placing work on ``iid``; it retires once its
+        queues empty (no request is ever dropped)."""
+        inst = self.instances[iid]
+        if inst.retired or inst.draining:
+            return
+        inst.draining = True
+        self.pool_events.append((self.now, f"drain {iid}"))
+        self._maybe_retire(inst)
+
+    def _maybe_retire(self, inst: InstanceState) -> None:
+        if not (inst.draining and not inst.busy and inst.n_queued == 0):
+            return
+        # never retire the last live member: a pool with zero active
+        # instances can place no work and the session would stall — the
+        # drain is cancelled instead (the old engine loop had this guard;
+        # the shared driver applies it to both backends)
+        others = [i for i in self.instances
+                  if i is not inst and not i.retired and not i.draining]
+        if not others:
+            inst.draining = False
+            self.pool_events.append((self.now, f"undrain {inst.iid}"))
+            return
+        inst.draining = False
+        inst.retired = True
+        inst.segments[-1][1] = self.now
+        self.backend.retire(inst.iid)
+        self.pool_events.append((self.now, f"retire {inst.iid}"))
+
+    def migrate(self, src_iid: int, dst_iid: int, max_micros: int) -> int:
+        """Move up to ``max_micros`` queued (not in-flight) micro-requests
+        from a hot instance to a cold one.  A micro that already computed
+        KV on the source pays the KV move on the inter-instance link (the
+        simulator models the delay; a real backend physically re-homes
+        the slot state) before it becomes runnable on the destination."""
+        src, dst = self.instances[src_iid], self.instances[dst_iid]
+        moved = 0
+
+        # a waiting beta has no KV yet (its handoff redirects to the new
+        # home); anything started owns KV for every position < pos
+        def resident_kv(m: MicroState) -> int:
+            return 0 if m.ready == float("inf") else m.pos
+
+        # cheapest moves first: least resident KV on the source
+        candidates = sorted(
+            (m for m in src.prefill_q + src.decode_q
+             if m not in src.in_flight),
+            key=resident_kv)
+        for m in candidates:
+            if moved >= max_micros:
+                break
+            if not self.backend.on_migrate(m, src_iid, dst_iid):
+                continue
+            q_src = src.prefill_q if m in src.prefill_q else src.decode_q
+            q_dst = dst.prefill_q if q_src is src.prefill_q else dst.decode_q
+            q_src.remove(m)
+            resident = resident_kv(m)
+            if resident > 0:
+                nbytes = self.cost.kv_transfer_bytes(resident)
+                self.migration_bytes += nbytes
+                self.transfer_bytes += nbytes
+                if self.backend.virtual_clock:
+                    delay = self.cost.kv_transfer_time(resident)
+                    m.ready = max(m.ready, self.now + delay)
+                    self.transfer_exposed += delay
+            m.iid = dst_iid
+            q_dst.append(m)
+            moved += 1
+            # wake the destination when the micro actually becomes
+            # runnable (a waiting beta is woken by release_beta instead)
+            if m.ready != float("inf"):
+                self._push(max(self.now, m.ready), "kick", dst_iid)
+        if moved:
+            self.migrations += moved
+            self._maybe_retire(src)
+        return moved
+
+    # ---------------- admission control ----------------
+    _queued_view = staticmethod(queued_view)
+
+    def predicted_ttft(self, r: Request) -> float:
+        """Best-case first-token time on the least-loaded instance.
+
+        Decodes co-run with the newcomer's prefill in mixed batches, so
+        the wait is NOT the full queue drain — it is the SLO-paced
+        drain of the prefill tokens ahead of it plus its own: with a
+        per-pass budget ``M`` (Algorithm 2's inversion under the
+        request's TBT class), first token lands after
+        ``ceil((queued_prefill + P) / M)`` passes."""
+        act = self.active_instances() or self.pool_instances()
+        if not act:
+            return float("inf")
+        slo = r.slo.tbt if r.slo is not None else self.cfg.slo
+        best = float("inf")
+        for inst in act:
+            queued_pf = sum(m.prefill_remaining for m in inst.prefill_q)
+            dnum = len(inst.decode_q)
+            avg_ctx = int(sum(m.pos for m in inst.decode_q) / dnum) \
+                if dnum else 0
+            M = max(1, self.cost.max_prefill_tokens(slo, min(dnum, 8),
+                                                    avg_ctx))
+            per_pass = self.cost.mixed_batch_latency(M, 0, dnum, avg_ctx)
+            n_pass = math.ceil((queued_pf + r.P) / M)
+            best = min(best, n_pass * per_pass)
+        return best
+
+    def _admit(self, r: Request) -> bool:
+        if not self.cfg.admission or r.slo is None or r.slo.admits_always:
+            return True
+        return self.predicted_ttft(r) <= r.slo.ttft
+
+    def _reject(self, r: Request, reason: str,
+                arrival: Optional[float] = None) -> None:
+        r.to(RequestState.REJECTED, self.now)
+        st = self.req_states.setdefault(
+            r.rid, ReqState(r, arrival=r.arrival if arrival is None
+                            else arrival))
+        st.rejected = True
+        self._finalize(st)
+
+    # ---------------- arrival ----------------
+    def _on_arrival(self, r: Request) -> None:
+        self._arrivals_left -= 1
+        if r.state != RequestState.QUEUED:
+            # a reused trace object carries the previous run's terminal
+            # state; arrival starts a fresh lifecycle
+            r.reset_lifecycle()
+        # as-fast-as-possible wall-clock replay: the request "arrives"
+        # when dispatched (kept off the shared Request object so a trace
+        # can be replayed through several arms)
+        arrival = self.now \
+            if (not self.backend.virtual_clock and not self.cfg.open_loop) \
+            else r.arrival
+        if r.slo is None and self.cfg.default_slo is not None:
+            r.slo = self.cfg.default_slo
+        self.backend.register(r)
+        if not self._admit(r):
+            self._reject(r, "predicted TTFT over SLO", arrival=arrival)
+            return
+        r.to(RequestState.ADMITTED, self.now)
+        placements = self.policy.place(r, self, self.now)
+        if hasattr(self.policy, "last_overhead"):
+            self.sched_overheads.append(self.policy.last_overhead)
+        # reserve backend resources; on exhaustion, shed the request
+        # instead of stalling (satellite: the old loop spun forever)
+        placed: List[MicroState] = []
+        for inst_id, sm in placements:
+            sm.iid = inst_id
+            if not self.backend.on_place(inst_id, sm):
+                for p in placed:
+                    self.backend.release(p)
+                if hasattr(self.policy, "on_cancel"):
+                    self.policy.on_cancel(r.rid, self)
+                self._reject(r, "no free slots", arrival=arrival)
+                return
+            placed.append(sm)
+        st = ReqState(r, arrival=arrival, n_micro=len(placements))
+        self.req_states[r.rid] = st
+        self._open_requests += 1
+        for inst_id, sm in placements:
+            inst = self.instances[inst_id]
+            # real backends: the final forward pass is not needed for the
+            # last token (it is emitted by the pass before), so the micro
+            # covering the request's tail runs one fewer decode step
+            if (self.backend.emits_tokens and sm.decode_remaining > 0
+                    and sm.mr.end >= r.true_L):
+                sm.decode_remaining -= 1
+            if sm.prefill_remaining > 0:
+                inst.prefill_q.append(sm)
+            elif sm.decode_remaining > 0:
+                inst.decode_q.append(sm)
+            else:
+                # degenerate span (e.g. 1-token tail absorbed above)
+                self._micro_finished(sm)
+                continue
+            self._maybe_start_batch(inst)
+
+    # ---------------- batching ----------------
+    def _work_meta(self, m: MicroState):
+        slo = m.mr.parent.slo
+        tbt = slo.tbt if slo is not None else None
+        deadline = None
+        if slo is not None and math.isfinite(slo.ttft):
+            st = self.req_states.get(m.mr.parent.rid)
+            arrival = st.arrival if st is not None else m.mr.parent.arrival
+            deadline = arrival + slo.ttft
+        return tbt, deadline
+
+    def _maybe_start_batch(self, inst: InstanceState) -> None:
+        if inst.busy or inst.retired or not inst.has_work(self.now):
+            return
+        pf = [m for m in inst.prefill_q if m.ready <= self.now]
+        dc = [m for m in inst.decode_q if m.ready <= self.now]
+        if inst.role == "prefill":
+            dc = []
+        if inst.role == "decode":
+            pf = []
+        cap = self.backend.max_chunk
+        pworks, dworks = [], []
+        for m in pf:
+            tbt, deadline = self._work_meta(m)
+            rem = m.prefill_remaining if cap is None else \
+                min(m.prefill_remaining, cap)
+            pworks.append(PrefillWork(m.rid, rem, m.pos, deadline=deadline))
+        for m in dc:
+            tbt, _ = self._work_meta(m)
+            dworks.append(DecodeWork(m.rid, m.pos, tbt=tbt))
+        plan = inst.scheduler.next_batch(pworks, dworks)
+        if not plan.decodes and not plan.prefills:
+            return
+        # map back to MicroState
+        by_rid = {m.rid: m for m in pf + dc}
+        grants = [(by_rid[w.rid], g) for w, g in plan.prefills]
+        decs = [by_rid[w.rid] for w in plan.decodes]
+        inst.in_flight = {m for m, _ in grants} | set(decs)
+        for m in inst.in_flight:
+            m.mr.parent.to(
+                RequestState.RUNNING_BETA if m.mr.role == "beta"
+                else RequestState.RUNNING_ALPHA, self.now)
+        items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
+                 [WorkItem("decode", 1, m.pos) for m in decs])
+        res = self.backend.execute(inst, grants, decs)
+        inst.busy_time += res.latency
+        inst.flops_done += self.cost.flops(items)
+        inst.bytes_done += self.cost.bytes_moved(items)
+        if res.deferred:
+            inst.busy = True
+            self._push(self.now + res.latency, "batch_done",
+                       (inst.iid, grants, decs, plan, res))
+        else:
+            # synchronous substrate: the wall clock already advanced
+            self._advance(self._wall())
+            self._on_batch_done((inst.iid, grants, decs, plan, res))
+
+    def _on_batch_done(self, payload) -> None:
+        iid, grants, decs, plan, res = payload
+        inst = self.instances[iid]
+        inst.busy = False
+        inst.in_flight = set()
+        inst.scheduler.record(plan, res.latency)
+        # prefill progress
+        for m, g in grants:
+            if m.cancelled:
+                self._reap_cancelled(inst, m)
+                continue
+            m.prefill_remaining -= g
+            m.pos += g
+            if m.prefill_remaining <= 0:
+                inst.prefill_q.remove(m)
+                st = self.req_states[m.mr.parent.rid]
+                # the forward pass that consumed the last prompt token
+                # emitted the first output token
+                if m.pos >= m.mr.parent.P and st.ttft is None:
+                    st.ttft = self.now - st.arrival
+                    tok = res.tokens.get(m.rid)
+                    if tok is not None:
+                        self._emit(st, m, tok)
+                if m.decode_remaining > 0:
+                    inst.decode_q.append(m)
+                else:
+                    self._micro_finished(m)
+        # decode progress: every decode in the batch emitted one token
+        for m in decs:
+            if m.cancelled:
+                self._reap_cancelled(inst, m)
+                continue
+            m.decode_remaining -= 1
+            m.pos += 1
+            st = self.req_states[m.mr.parent.rid]
+            if self.backend.emits_tokens:
+                self._emit(st, m, res.tokens.get(m.rid))
+            else:
+                st.token_times.append(self.now)
+                h = self.handles.get(m.mr.parent.rid)
+                if h is not None:
+                    h.tokens.append(m.pos - 1)   # synthetic: position
+            if m.decode_remaining <= 0:
+                inst.decode_q.remove(m)
+                self._micro_finished(m)
+        if self.backend.virtual_clock:
+            self._maybe_start_batch(inst)
+        else:
+            self._push(self.now, "kick", iid)
+        self._maybe_retire(inst)
+
+    def _emit(self, st: ReqState, m: MicroState, tok: Optional[int]) -> None:
+        st.token_times.append(self.now)
+        if st.ttft is None:
+            st.ttft = self.now - st.arrival
+        h = self.handles.get(m.mr.parent.rid)
+        if h is not None and tok is not None:
+            h.tokens.append(tok)
+
+    def _reap_cancelled(self, inst: InstanceState, m: MicroState) -> None:
+        for q in (inst.prefill_q, inst.decode_q):
+            if m in q:
+                q.remove(m)
+        self.backend.release(m)
+
+    # ---------------- micro-request lifecycle ----------------
+    def _micro_finished(self, m: MicroState) -> None:
+        st = self.req_states[m.mr.parent.rid]
+        st.micro_done += 1
+        self.policy.on_micro_finished(m, self, self.now)
+        self.backend.release(m)
+        if st.micro_done >= st.n_micro and st.done_at is None:
+            st.done_at = self.now
+            st.req.to(RequestState.DONE, self.now)
+            self._open_requests -= 1
+            self._finalize(st)
+
+    def _finalize(self, st: ReqState) -> None:
+        """Bound long-lived sessions: with ``retain_finished=False``,
+        terminal requests release every per-request record."""
+        if self.cfg.retain_finished:
+            return
+        rid = st.req.rid
+        self.req_states.pop(rid, None)
+        self.handles.pop(rid, None)
+        self.backend.forget(rid)
+
+    def release_beta(self, beta: MicroState, ready: float,
+                     exposed: float, nbytes: float,
+                     src: Optional[MicroState] = None) -> None:
+        """Called by the policy when alpha completes: beta becomes
+        runnable after the KV handoff.  The simulator models the
+        (possibly chunk-overlapped) transfer delay the policy computed;
+        a real backend physically moves the state now and the measured
+        wall time *is* the delay."""
+        if beta.prefill_remaining <= 0 and beta.decode_remaining <= 0:
+            # degenerate tail micro (its only token was emitted by the
+            # alpha's final pass): nothing to hand off or run
+            return
+        beta.mr.parent.to(RequestState.HANDOFF, self.now)
+        if src is not None and not self.backend.virtual_clock:
+            t0 = _time.monotonic()
+            nbytes = self.backend.do_handoff(src, beta)
+            exposed = _time.monotonic() - t0
+            self._advance(self._wall())
+            ready = self.now
+        self.transfer_exposed += exposed
+        self.transfer_bytes += nbytes
+        beta.ready = ready
+        self._push(max(self.now, ready), "kick", beta.iid)
+
+    # ---------------- metrics ----------------
+    def _metrics(self, requests: Sequence[Request]) -> SessionMetrics:
+        slo = self.cfg.slo
+        tbts: List[float] = []
+        ttfts: List[float] = []
+        tok_total = 0
+        tok_in = 0
+        req_ok = 0
+        completed = 0
+        n_rej = sum(1 for st in self.req_states.values() if st.rejected)
+        n_can = sum(1 for st in self.req_states.values() if st.cancelled)
+        t_end = max((st.done_at or self.now) for st in self.req_states.values()) \
+            if self.req_states else self.now
+        duration = max(t_end, 1e-9)
+        per_class: Dict[str, ClassReport] = {}
+
+        def class_of(st: ReqState) -> ClassReport:
+            name = st.req.slo.name if st.req.slo is not None else "default"
+            if name not in per_class:
+                per_class[name] = ClassReport(name)
+            return per_class[name]
+
+        cls_ttfts: Dict[str, List[float]] = {}
+        cls_tbts: Dict[str, List[float]] = {}
+        for st in self.req_states.values():
+            cr = class_of(st)
+            cr.offered += 1
+            if st.rejected:
+                cr.rejected += 1
+                continue
+            if st.cancelled:
+                cr.cancelled += 1
+                continue
+            if st.done_at is None:
+                continue
+            completed += 1
+            cr.completed += 1
+            cls_slo = st.req.slo.tbt if st.req.slo is not None else slo
+            if st.ttft is not None:
+                ttfts.append(st.ttft)
+                cls_ttfts.setdefault(cr.name, []).append(st.ttft)
+            ts = st.token_times
+            gaps = [b - a for a, b in zip(ts, ts[1:])]
+            tbts.extend(gaps)
+            cls_tbts.setdefault(cr.name, []).extend(gaps)
+            tok_total += len(ts)
+            cr.tokens += len(ts)
+            ok = sum(1 for g in gaps if g <= slo) + (1 if ts else 0)
+            tok_in += ok
+            cr.tokens_in_slo += \
+                sum(1 for g in gaps if g <= cls_slo) + (1 if ts else 0)
+            if all(g <= slo for g in gaps):
+                req_ok += 1
+        for name, cr in per_class.items():
+            cr.goodput = cr.tokens_in_slo / duration
+            tf = cls_ttfts.get(name, [])
+            tb = cls_tbts.get(name, [])
+            cr.ttft_p50 = float(np.percentile(tf, 50)) if tf else 0.0
+            cr.ttft_p99 = float(np.percentile(tf, 99)) if tf else 0.0
+            cr.tbt_p99 = float(np.percentile(tb, 99)) if tb else 0.0
+        mfu, hbm, busy = [], [], []
+        inst_seconds = 0.0
+        for inst in self.instances:
+            mfu.append(inst.flops_done / max(duration, 1e-9) / self.cost.hw.peak_flops)
+            hbm.append(min(1.0, (self.cost.weight_bytes +
+                                 inst.kv_tokens_resident * self.cost.kv_bytes_per_tok)
+                           / self.cfg.hbm_bytes))
+            busy.append(inst.busy_time / max(duration, 1e-9))
+            inst_seconds += inst.active_seconds(duration)
+        return SessionMetrics(
+            duration=duration,
+            completed=completed,
+            offered=len(requests),
+            tokens_total=tok_total,
+            tokens_in_slo=tok_in,
+            tbts=np.asarray(tbts),
+            ttfts=np.asarray(ttfts),
+            req_attained=req_ok / max(1, completed),
+            scheduling_overheads=np.asarray(self.sched_overheads),
+            per_instance_busy=busy,
+            per_instance_mfu=mfu,
+            per_instance_hbm=hbm,
+            transfer_exposed_total=self.transfer_exposed,
+            transfer_bytes_total=self.transfer_bytes,
+            instance_seconds=inst_seconds,
+            n_instances_peak=self.n_instances_peak,
+            n_instances_final=len(self.active_instances()),
+            migrations=self.migrations,
+            migration_bytes=self.migration_bytes,
+            pool_events=list(self.pool_events),
+            rejected=n_rej,
+            cancelled=n_can,
+            per_class=per_class,
+        )

@@ -12,7 +12,15 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.request import Request
+from repro.core.request import Request, SLO_CLASSES, SLOClass
+
+# Decode-length predictor error applied when a generator is not given an
+# explicit ``predict_sigma``: the paper's proxy-model predictor (§5) puts
+# >95% of predictions within +-100 tokens, i.e. sigma ~= 50.  The seed
+# silently fell back to the ORACLE decode length (predicted == true), so
+# split-point error was never exercised; pass ``predict_sigma=0`` to get
+# the oracle back explicitly.
+DEFAULT_PREDICT_SIGMA = 50.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,11 +54,18 @@ def _lengths(rng: np.random.Generator, spec: WorkloadSpec, n: int):
 
 
 def generate_trace(workload: str, qps: float, duration: float,
-                   seed: int = 0, predict_sigma: float = 0.0) -> List[Request]:
+                   seed: int = 0,
+                   predict_sigma: Optional[float] = None,
+                   slo_mix: Optional[Dict[str, float]] = None
+                   ) -> List[Request]:
     """Poisson arrivals at ``qps`` for ``duration`` seconds.
 
     ``predict_sigma``: std-dev of the decode-length predictor's error in
-    tokens (paper §5: >95% of predictions within +-100 tokens).
+    tokens (paper §5: >95% of predictions within +-100 tokens); defaults
+    to ``DEFAULT_PREDICT_SIGMA`` so schedulers see *predicted* lengths,
+    not the oracle.  ``slo_mix`` attaches SLO classes by weight, e.g.
+    ``{"interactive": 0.5, "standard": 0.3, "batch": 0.2}`` (names from
+    ``repro.core.request.SLO_CLASSES``).
     """
     spec = WORKLOADS[workload]
     rng = np.random.default_rng(seed)
@@ -60,7 +75,7 @@ def generate_trace(workload: str, qps: float, duration: float,
     n = len(arrivals)
     p, d = _lengths(rng, spec, n)
     return [_req(f"{workload}-{i}", arrivals[i], p[i], d[i], rng,
-                 predict_sigma) for i in range(n)]
+                 predict_sigma, slo_mix) for i in range(n)]
 
 
 def hybrid_trace(qps: float, duration: float, seed: int = 0,
@@ -103,7 +118,9 @@ def _thinned_arrivals(rng: np.random.Generator, rate_fn, rate_max: float,
 def diurnal_trace(qps_peak: float, duration: float, seed: int = 0,
                   workload: str = "burstgpt", floor: float = 0.15,
                   period: Optional[float] = None,
-                  predict_sigma: float = 0.0) -> List[Request]:
+                  predict_sigma: Optional[float] = None,
+                  slo_mix: Optional[Dict[str, float]] = None
+                  ) -> List[Request]:
     """Sinusoidal QPS between ``floor * qps_peak`` and ``qps_peak`` —
     one full valley->peak->valley cycle per ``period`` (default: the
     whole window), starting at the valley."""
@@ -117,14 +134,16 @@ def diurnal_trace(qps_peak: float, duration: float, seed: int = 0,
 
     arrivals = _thinned_arrivals(rng, rate, qps_peak, duration)
     p, d = _lengths(rng, spec, len(arrivals))
-    return [_req(f"diurnal-{i}", arrivals[i], p[i], d[i], rng, predict_sigma)
-            for i in range(len(arrivals))]
+    return [_req(f"diurnal-{i}", arrivals[i], p[i], d[i], rng,
+                 predict_sigma, slo_mix) for i in range(len(arrivals))]
 
 
 def phase_shift_trace(qps: float, duration: float, seed: int = 0,
                       phases=("mini_reasoning", "azure_code",
                               "burstgpt", "arxiv_summarization"),
-                      predict_sigma: float = 0.0) -> List[Request]:
+                      predict_sigma: Optional[float] = None,
+                      slo_mix: Optional[Dict[str, float]] = None
+                      ) -> List[Request]:
     """Hard workload-mix switches: the window is split evenly across
     ``phases`` and each segment draws request shapes from a different
     paper workload (decode-heavy -> prefill-heavy -> balanced -> ...),
@@ -140,7 +159,8 @@ def phase_shift_trace(qps: float, duration: float, seed: int = 0,
             break
         spec = WORKLOADS[phases[min(int(t // seg), len(phases) - 1)]]
         p, d = _lengths(rng, spec, 1)
-        reqs.append(_req(f"phase-{i}", t, p[0], d[0], rng, predict_sigma))
+        reqs.append(_req(f"phase-{i}", t, p[0], d[0], rng, predict_sigma,
+                         slo_mix))
         i += 1
     return reqs
 
@@ -148,7 +168,9 @@ def phase_shift_trace(qps: float, duration: float, seed: int = 0,
 def burst_trace(qps_base: float, duration: float, seed: int = 0,
                 workload: str = "burstgpt",
                 bursts=((0.35, 0.15, 5.0),),
-                predict_sigma: float = 0.0) -> List[Request]:
+                predict_sigma: Optional[float] = None,
+                slo_mix: Optional[Dict[str, float]] = None
+                ) -> List[Request]:
     """Baseline Poisson traffic with injected bursts.  Each burst is
     ``(start_frac, len_frac, multiplier)``: within the window
     ``[start_frac, start_frac + len_frac] * duration`` the arrival rate
@@ -168,8 +190,8 @@ def burst_trace(qps_base: float, duration: float, seed: int = 0,
     arrivals = _thinned_arrivals(rng, rate, qps_base * max(1.0, mult_max),
                                  duration)
     p, d = _lengths(rng, spec, len(arrivals))
-    return [_req(f"burst-{i}", arrivals[i], p[i], d[i], rng, predict_sigma)
-            for i in range(len(arrivals))]
+    return [_req(f"burst-{i}", arrivals[i], p[i], d[i], rng,
+                 predict_sigma, slo_mix) for i in range(len(arrivals))]
 
 
 SHIFTING_TRACES = {
@@ -189,11 +211,27 @@ def shifting_trace(kind: str, qps: float, duration: float, seed: int = 0,
 
 
 def _req(rid: str, t: float, p: int, d: int, rng: np.random.Generator,
-         predict_sigma: float) -> Request:
+         predict_sigma: Optional[float],
+         slo_mix: Optional[Dict[str, float]] = None) -> Request:
+    if predict_sigma is None:
+        predict_sigma = DEFAULT_PREDICT_SIGMA
     pred = int(d)
     if predict_sigma > 0:
         pred = max(1, int(round(d + rng.normal(0, predict_sigma))))
-    return Request(rid, float(t), int(p), int(d), predicted_decode=pred)
+    slo = pick_slo(rng, slo_mix)
+    return Request(rid, float(t), int(p), int(d), predicted_decode=pred,
+                   slo=slo)
+
+
+def pick_slo(rng: np.random.Generator,
+              slo_mix: Optional[Dict[str, float]]) -> Optional[SLOClass]:
+    """Draw an SLO class from a {name: weight} mix (None => unclassed)."""
+    if not slo_mix:
+        return None
+    names = sorted(slo_mix)
+    w = np.array([slo_mix[n] for n in names], float)
+    name = names[int(rng.choice(len(names), p=w / w.sum()))]
+    return SLO_CLASSES[name]
 
 
 def replay_trace(qps: float, duration: float, seed: int = 0) -> List[Request]:
@@ -217,6 +255,6 @@ def replay_trace(qps: float, duration: float, seed: int = 0) -> List[Request]:
             p_mode, d_mode = 300, 1200
         p = int(np.clip(rng.lognormal(np.log(p_mode), 0.4), 8, 16384))
         d = int(np.clip(rng.lognormal(np.log(d_mode), 0.4), 4, 16384))
-        reqs.append(Request(f"replay-{i}", t, p, d))
+        reqs.append(_req(f"replay-{i}", t, p, d, rng, None))
         i += 1
     return reqs

@@ -1,1 +1,2 @@
 from repro.engine.runner import InstanceEngine, BatchItem  # noqa: F401
+from repro.engine.backend import EngineBackend  # noqa: F401

@@ -1,0 +1,161 @@
+"""Real-engine substrate for the shared ``ServeSession`` driver.
+
+``EngineBackend`` is the wall-clock counterpart of the simulator's
+``SimBackend``: batches the session's local schedulers compose execute
+on REAL JAX engines (reduced models on CPU; the same code path a TPU
+deployment jits), sampled tokens stream back through the session's
+handles, and KV/state handoffs physically move arrays between engines
+via ``export_state`` / ``import_state``.
+
+Because all scheduling lives in the session/policies, the two-level
+scheduler, SLO classes, admission control, and the elastic pool
+controller behave byte-identically here and in the simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import A100, BatchCostModel, HardwareSpec
+from repro.core.request import Request
+from repro.core.session import Backend, ExecResult, InstanceState, MicroState
+from repro.engine.runner import BUCKETS, BatchItem, InstanceEngine
+from repro.engine.sampling import sample
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class _ReqRecord:
+    """Per-request engine-side state shared by its micro-requests."""
+    prompt: np.ndarray             # (P,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+
+class EngineBackend(Backend):
+    virtual_clock = False
+    emits_tokens = True
+    max_chunk = BUCKETS[-1]        # engine padding-bucket ceiling
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
+                 max_len: int = 512, hw: HardwareSpec = A100,
+                 transfer_chunk: int = 32, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.transfer_chunk = transfer_chunk
+        self.cost = BatchCostModel(cfg, hw)
+        self.engines: Dict[int, InstanceEngine] = {}
+        self.records: Dict[str, _ReqRecord] = {}
+        self._slots: Dict[str, Tuple[int, int]] = {}   # micro rid -> (iid, slot)
+        self.kv_bytes_moved = 0
+        self._rng = np.random.default_rng(seed)
+
+    # ---------------- pool lifecycle ----------------
+    def spawn(self, iid: int) -> None:
+        if iid not in self.engines:
+            self.engines[iid] = InstanceEngine(self.cfg, self.params,
+                                               self.n_slots, self.max_len)
+
+    def retire(self, iid: int) -> None:
+        self.engines.pop(iid, None)
+
+    # ---------------- request plumbing ----------------
+    def register(self, req: Request, prompt=None) -> None:
+        if req.rid in self.records:
+            return
+        if prompt is None:
+            # trace replay supplies lengths only: synthesize the prompt
+            prompt = self._rng.integers(0, self.cfg.vocab_size, req.P)
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) + req.decode_len > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: P+D = {len(prompt) + req.decode_len} "
+                f"exceeds engine max_len {self.max_len}")
+        self.records[req.rid] = _ReqRecord(prompt, req.decode_len)
+
+    def forget(self, rid: str) -> None:
+        self.records.pop(rid, None)
+
+    def on_place(self, iid: int, micro: MicroState) -> bool:
+        eng = self.engines.get(iid)
+        if eng is None or eng.n_free == 0:
+            return False
+        self._slots[micro.rid] = (iid, eng.alloc(micro.rid))
+        return True
+
+    def release(self, micro: MicroState) -> None:
+        loc = self._slots.pop(micro.rid, None)
+        if loc is not None:
+            eng = self.engines.get(loc[0])
+            if eng is not None:
+                eng.free(loc[1])
+
+    # ---------------- execution ----------------
+    def execute(self, inst: InstanceState,
+                grants: Sequence[Tuple[MicroState, int]],
+                decs: Sequence[MicroState]) -> ExecResult:
+        eng = self.engines[inst.iid]
+        items: List[BatchItem] = []
+        sampled: List[Tuple[MicroState, int]] = []
+        for m, g in grants:
+            rec = self.records[m.mr.parent.rid]
+            slot = self._slots[m.rid][1]
+            toks = rec.prompt[m.pos:m.pos + g]
+            # the pass consuming the last prompt token emits the first
+            # output token
+            want = (m.pos + g) >= m.mr.parent.P
+            items.append(BatchItem(slot, toks, m.pos, want_logits=want))
+            if want:
+                sampled.append((m, slot))
+        for m in decs:
+            rec = self.records[m.mr.parent.rid]
+            slot = self._slots[m.rid][1]
+            tok = rec.generated[-1] if rec.generated else int(rec.prompt[-1])
+            items.append(BatchItem(slot, np.array([tok], np.int32), m.pos,
+                                   want_logits=True))
+            sampled.append((m, slot))
+        t0 = time.monotonic()
+        out = eng.run_batch(items)
+        latency = time.monotonic() - t0
+        tokens: Dict[str, int] = {}
+        for m, slot in sampled:
+            if slot in out:
+                tok = sample(out[slot])
+                self.records[m.mr.parent.rid].generated.append(tok)
+                tokens[m.rid] = tok
+        return ExecResult(latency=latency, tokens=tokens, deferred=False)
+
+    # ---------------- KV/state movement ----------------
+    def do_handoff(self, src: MicroState, dst: MicroState) -> float:
+        """Chunk-wise KV/state handoff from the finished alpha to its
+        beta (paper §4.3), on actual cache arrays."""
+        si, ss = self._slots[src.rid]
+        di, ds = self._slots[dst.rid]
+        pieces = self.engines[si].export_state(ss, upto=src.pos,
+                                               chunk=self.transfer_chunk)
+        self.engines[di].import_state(ds, pieces)
+        dst.pos = src.pos
+        nbytes = int(self.cost.kv_transfer_bytes(src.pos))
+        self.kv_bytes_moved += nbytes
+        return float(nbytes)
+
+    def on_migrate(self, micro: MicroState, src_iid: int,
+                   dst_iid: int) -> bool:
+        dst = self.engines.get(dst_iid)
+        if dst is None or dst.n_free == 0:
+            return False
+        old_iid, old_slot = self._slots[micro.rid]
+        new_slot = dst.alloc(micro.rid)
+        if micro.pos > 0 and micro.ready != float("inf"):
+            pieces = self.engines[old_iid].export_state(
+                old_slot, upto=micro.pos, chunk=self.transfer_chunk)
+            dst.import_state(new_slot, pieces)
+            self.kv_bytes_moved += int(self.cost.kv_transfer_bytes(micro.pos))
+        self.engines[old_iid].free(old_slot)
+        self._slots[micro.rid] = (dst_iid, new_slot)
+        return True

@@ -1,248 +1,117 @@
 """Engine-backed serving cluster: DynaServe's two-level scheduler driving
-REAL JAX engines (reduced models on CPU; the same code path a TPU
-deployment jits).
+REAL JAX engines, through the same ``ServeSession`` event loop the
+simulator uses (``repro.core.session``).
 
-This is the integration layer the end-to-end tests and the serve example
-exercise: micro-request splitting, per-instance batch composition, and
-chunk-wise KV/state handoff between instances all actually happen on
-arrays.
+``ServingCluster`` is a thin convenience wrapper that wires an
+``EngineBackend`` + a policy into a session and keeps the seed-era
+surface alive for existing callers:
+
+* ``submit(prompt, max_new_tokens)`` -> streaming ``ServeHandle``
+  (the old blocking pattern still works: ``run_until_done(handles)``)
+* ``attach_instance`` / ``drain_instance`` — elastic pool lifecycle
+* ``cancel(rid)`` — frees slots and aborts pending beta handoffs
+
+New code should use ``session.generate(...)`` and iterate the handle;
+see ``repro.launch.serve`` for the open-loop online driver.
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
-import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
-import numpy as np
-
-from repro.core.costmodel import BatchCostModel, HardwareSpec, A100
-from repro.core.global_scheduler import GlobalScheduler, InstanceView
-from repro.core.predictor import QueuedWork
-from repro.core.request import MicroRequest, Request, split_request
-from repro.engine.runner import BatchItem, InstanceEngine
-from repro.engine.sampling import sample
+from repro.core.costmodel import A100, HardwareSpec
+from repro.core.request import SLOClass
+from repro.core.session import (
+    ServeHandle, ServeSession, SessionConfig, SessionStallError,
+)
+from repro.engine.backend import EngineBackend
 from repro.models.config import ModelConfig
 
-
-@dataclasses.dataclass
-class LiveRequest:
-    req: Request
-    prompt: np.ndarray                 # (P,) int32
-    max_new_tokens: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    token_walltimes: List[float] = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass
-class LiveMicro:
-    lr: LiveRequest
-    mr: MicroRequest
-    slot: int
-    pos: int                            # next position to process
-    engine_id: int
-
-    @property
-    def is_prefill(self) -> bool:
-        return self.pos < self.lr.req.P
-
-    @property
-    def end(self) -> int:
-        return self.mr.end
+# compat alias: the old engine returned LiveRequest objects; handles
+# expose the same ``.req`` / ``.generated`` surface
+LiveRequest = ServeHandle
 
 
 class ServingCluster:
     """N unified instances + DynaServe APS, on real engines.
 
-    The pool is elastic: ``attach_instance`` adds a member between steps
-    and ``drain_instance`` retires one without dropping work — the
-    drained engine finishes its queue (it still receives beta handoffs
-    already committed to it), stops receiving placements, and is
-    detached once idle.
+    The pool is elastic: ``attach_instance`` adds a member between
+    batches and ``drain_instance`` retires one without dropping work —
+    the drained engine finishes its queue (it still receives beta
+    handoffs already committed to it), stops receiving placements, and
+    is detached once idle.
+
+    ``prefill_budget`` is the per-batch chunk of the non-SLO-aware
+    colocation arm (``split=False``); the split path sizes batches with
+    the SLO-aware local scheduler instead.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_instances: int = 2,
                  n_slots: int = 8, max_len: int = 512,
                  prefill_budget: int = 64, transfer_chunk: int = 32,
-                 split: bool = True, hw: HardwareSpec = A100):
-        self.cfg = cfg
-        self.params = params
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.engines: Dict[int, InstanceEngine] = {
-            i: InstanceEngine(cfg, params, n_slots, max_len)
-            for i in range(n_instances)
-        }
-        self.queues: Dict[int, List[LiveMicro]] = {
-            i: [] for i in range(n_instances)
-        }
-        self.draining: set = set()
-        self._next_eid = n_instances
-        self.cost = BatchCostModel(cfg, hw)
-        self.gs = GlobalScheduler(self.cost, margin_tokens=0)
-        self.prefill_budget = prefill_budget
-        self.transfer_chunk = transfer_chunk
-        self.split = split
-        self.pending_beta: Dict[str, LiveMicro] = {}
-        self.kv_bytes_moved = 0
-        self._iter = itertools.count()
+                 split: bool = True, hw: HardwareSpec = A100,
+                 slo: float = 0.100, admission: bool = False,
+                 default_slo: Optional[SLOClass] = None):
+        from repro.sim.policies import ColocationPolicy, DynaServePolicy
+        self.backend = EngineBackend(cfg, params, n_slots, max_len, hw,
+                                     transfer_chunk)
+        if split:
+            self.policy = DynaServePolicy(self.backend.cost, slo,
+                                          transfer_chunk=transfer_chunk)
+            self.gs = self.policy.gs
+        else:
+            self.policy = ColocationPolicy(chunk=prefill_budget,
+                                           slo_aware=False)
+            self.gs = None
+        self.session = ServeSession(self.backend, self.policy, SessionConfig(
+            n_instances=n_instances, slo=slo, admission=admission,
+            default_slo=default_slo))
 
     # ---------------- elastic pool lifecycle ----------------
+    @property
+    def engines(self):
+        return self.backend.engines
+
+    @property
+    def draining(self) -> set:
+        return {i.iid for i in self.session.instances
+                if i.draining and not i.retired}
+
     def active_ids(self) -> List[int]:
-        return sorted(e for e in self.engines if e not in self.draining)
+        return sorted(i.iid for i in self.session.active_instances())
 
     def attach_instance(self) -> int:
         """Scale up: add a fresh engine; it joins placement immediately."""
-        eid = self._next_eid
-        self._next_eid += 1
-        self.engines[eid] = InstanceEngine(self.cfg, self.params,
-                                           self.n_slots, self.max_len)
-        self.queues[eid] = []
-        return eid
+        return self.session.add_instance().iid
 
     def drain_instance(self, eid: int) -> None:
         """Scale down: exclude ``eid`` from new placements; the engine is
-        detached by ``step`` once its queue and pending handoffs empty."""
-        if eid in self.engines:
-            self.draining.add(eid)
+        detached once its queue and pending handoffs empty (the last
+        live engine's drain is cancelled instead)."""
+        self.session.drain_instance(eid)
 
-    def _maybe_detach(self) -> None:
-        for eid in list(self.draining):
-            if len(self.engines) <= 1:
-                # the last engine can never leave; cancel its drain so
-                # the pool keeps accepting work
-                self.draining.discard(eid)
-                continue
-            if self.queues[eid]:
-                continue
-            if any(b.engine_id == eid for b in self.pending_beta.values()):
-                continue
-            del self.engines[eid]
-            del self.queues[eid]
-            self.draining.discard(eid)
+    # ---------------- serving ----------------
+    @property
+    def kv_bytes_moved(self) -> int:
+        return self.backend.kv_bytes_moved
 
-    # ------------------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               rid: Optional[str] = None) -> LiveRequest:
-        rid = rid or f"req{next(self._iter)}"
-        r = Request(rid, time.time(), len(prompt), max_new_tokens)
-        lr = LiveRequest(r, np.asarray(prompt, np.int32), max_new_tokens)
-        # a fully-draining pool still has to place work somewhere
-        act = self.active_ids() or sorted(self.engines)
-        if self.split and len(act) >= 2:
-            views = [InstanceView(e, self._view(e)) for e in act]
-            pl = self.gs.schedule(r, views)
-            alpha, beta = pl.alpha, pl.beta
-            ia, ib = pl.alpha_instance, pl.beta_instance
-        else:
-            alpha, beta = split_request(r, 1.0)
-            ia, ib = act[0], None
-        if alpha is not None and alpha.n_tokens > 0:
-            slot = self.engines[ia].alloc(alpha.rid)
-            lm = LiveMicro(lr, alpha, slot, 0, ia)
-            self.queues[ia].append(lm)
-            if beta is not None and beta.n_tokens > 0:
-                bslot = self.engines[ib].alloc(beta.rid)
-                bm = LiveMicro(lr, beta, bslot, beta.start, ib)
-                self.pending_beta[alpha.rid] = bm
-        elif beta is not None:
-            slot = self.engines[ib].alloc(beta.rid)
-            self.queues[ib].append(LiveMicro(lr, beta, slot, 0, ib))
-        return lr
+    def submit(self, prompt, max_new_tokens: int,
+               rid: Optional[str] = None,
+               slo: Optional[SLOClass] = None) -> ServeHandle:
+        return self.session.generate(prompt, max_new_tokens, rid=rid,
+                                     slo=slo)
 
-    def _view(self, i: int) -> List[QueuedWork]:
-        out = []
-        for m in self.queues[i]:
-            pf = max(0, min(m.end, m.lr.req.P) - m.pos)
-            dc = max(0, m.end - max(m.pos, m.lr.req.P))
-            out.append(QueuedWork(m.mr.rid, pf, dc, m.pos))
-        return out
+    def cancel(self, rid: str) -> bool:
+        return self.session.cancel(rid)
 
-    # ------------------------------------------------------------------
-    def step(self) -> int:
-        """One scheduling iteration across all instances; returns the
-        number of work items executed."""
-        executed = 0
-        for eid in sorted(self.engines):
-            eng = self.engines[eid]
-            q = self.queues[eid]
-            if not q:
-                continue
-            items: List[BatchItem] = []
-            handled: List[LiveMicro] = []
-            budget = self.prefill_budget
-            for m in list(q):
-                if m.is_prefill:
-                    if budget <= 0:
-                        continue
-                    take = min(budget, m.lr.req.P - m.pos,
-                               m.end - m.pos)
-                    toks = m.lr.prompt[m.pos:m.pos + take]
-                    last_of_prompt = (m.pos + take) >= m.lr.req.P
-                    items.append(BatchItem(m.slot, toks, m.pos,
-                                           want_logits=last_of_prompt))
-                    handled.append((m, take))
-                    budget -= take
-                else:
-                    # decode step: feed the last generated token
-                    tok = (m.lr.generated[-1] if m.lr.generated
-                           else int(m.lr.prompt[-1]))
-                    items.append(BatchItem(
-                        m.slot, np.array([tok], np.int32), m.pos,
-                        want_logits=True))
-                    handled.append((m, 1))
-            if not items:
-                continue
-            out = eng.run_batch(items)
-            executed += len(items)
-            now = time.time()
-            for m, take in handled:
-                was_prefill = m.is_prefill
-                m.pos += take
-                if was_prefill:
-                    if m.slot in out:        # prompt fully consumed
-                        tok = sample(out[m.slot])
-                        m.lr.generated.append(tok)
-                        m.lr.token_walltimes.append(now)
-                else:
-                    tok = sample(out[m.slot])
-                    m.lr.generated.append(tok)
-                    m.lr.token_walltimes.append(now)
-                if m.pos >= min(m.end, m.lr.req.true_L - 1) or \
-                        len(m.lr.generated) >= m.lr.max_new_tokens:
-                    self._finish_micro(m)
-        self._maybe_detach()
-        return executed
-
-    # ------------------------------------------------------------------
-    def _finish_micro(self, m: LiveMicro) -> None:
-        q = self.queues[m.engine_id]
-        if m in q:
-            q.remove(m)
-        eng = self.engines[m.engine_id]
-        beta = self.pending_beta.pop(m.mr.rid, None)
-        if beta is not None and len(m.lr.generated) < m.lr.max_new_tokens:
-            # chunk-wise KV/state handoff to the beta instance
-            pieces = eng.export_state(m.slot, upto=m.pos,
-                                      chunk=self.transfer_chunk)
-            self.engines[beta.engine_id].import_state(beta.slot, pieces)
-            self.kv_bytes_moved += int(self.cost.kv_transfer_bytes(m.pos))
-            beta.pos = m.pos
-            self.queues[beta.engine_id].append(beta)
-        elif beta is not None:
-            self.engines[beta.engine_id].free(beta.slot)
-        eng.free(m.slot)
-
-    # ------------------------------------------------------------------
-    def run_until_done(self, reqs: Sequence[LiveRequest],
-                       max_iters: int = 10_000) -> None:
+    def run_until_done(self, reqs: Sequence[ServeHandle],
+                       max_iters: int = 100_000) -> None:
+        """Blocking drain of the given handles (legacy surface; iterate
+        the handles for streaming delivery instead)."""
         for _ in range(max_iters):
-            if all(len(r.generated) >= r.max_new_tokens for r in reqs):
-                break
-            if self.step() == 0:
-                if all(len(r.generated) >= r.max_new_tokens for r in reqs):
-                    break
-                raise RuntimeError("cluster stalled with pending work")
-        for r in reqs:
-            r.done = True
+            if all(h.done for h in reqs):
+                return
+            if not self.session._pump():
+                if all(h.done for h in reqs):
+                    return
+                raise SessionStallError("cluster stalled with pending work")
+        raise SessionStallError(f"not done after {max_iters} events")

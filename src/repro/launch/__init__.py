@@ -1,0 +1,1 @@
+"""Launchers: serving, training, dry-run planning."""

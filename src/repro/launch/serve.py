@@ -1,52 +1,171 @@
-"""Serving launcher: DynaServe two-level scheduling on real JAX engines.
+"""Online serving driver: open-loop arrivals against the ``ServeSession``
+API, on either backend, reporting per-SLO-class TTFT / TBT / goodput.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
-      --requests 8 --instances 2
+Unlike the old blocking launcher (submit everything, ``run_until_done``),
+this drives the serving surface the way the paper measures it: requests
+arrive on their trace timestamps whether or not the system kept up, SLO
+classes attach admission + latency targets, and goodput is per-class
+SLO-attaining tokens per second measured at the API.
+
+  # real JAX engines, wall clock, open-loop arrivals (the CI smoke job)
+  PYTHONPATH=src python -m repro.launch.serve --smoke --open-loop
+
+  # simulator, paper workloads, elastic pool, admission control
+  PYTHONPATH=src python -m repro.launch.serve --backend sim \\
+      --workload burstgpt --qps 3 --duration 30 --policy elastic --admission
 """
 from __future__ import annotations
 
 import argparse
-import time
+from typing import Dict, List, Optional
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.engine.cluster import ServingCluster
-from repro.models.model import init_params
+from repro.core.costmodel import A100, BatchCostModel
+from repro.core.request import Request, SLO_CLASSES
+from repro.core.session import ServeSession, SessionConfig, SessionMetrics
+from repro.data.workloads import generate_trace, pick_slo
+from repro.sim.simulator import SimBackend
+
+
+def parse_slo_mix(text: Optional[str]) -> Optional[Dict[str, float]]:
+    """``interactive=0.5,standard=0.3,batch=0.2`` -> weight dict."""
+    if not text:
+        return None
+    mix = {}
+    for part in text.split(","):
+        name, _, w = part.partition("=")
+        if name not in SLO_CLASSES:
+            raise SystemExit(f"unknown SLO class {name!r}; "
+                             f"one of {sorted(SLO_CLASSES)}")
+        mix[name] = float(w or 1.0)
+    return mix
+
+
+def mini_trace(n: int, qps: float, seed: int,
+               slo_mix: Optional[Dict[str, float]],
+               p_max: int = 48, d_max: int = 16) -> List[Request]:
+    """Engine-scale trace: tiny prompts/outputs that fit a reduced
+    model's cache, Poisson arrivals, SLO classes by mix."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for i in range(n):
+        t += rng.exponential(1.0 / qps)
+        p = int(rng.integers(8, p_max))
+        d = int(rng.integers(4, d_max))
+        reqs.append(Request(f"online-{i}", t, p, d, predicted_decode=d,
+                            slo=pick_slo(rng, slo_mix)))
+    return reqs
+
+
+def report(m: SessionMetrics, label: str) -> None:
+    print(f"== {label} ==")
+    print(f"offered={m.offered} completed={m.completed} "
+          f"rejected={m.rejected} cancelled={m.cancelled} "
+          f"duration={m.duration:.2f}s goodput={m.goodput:.1f} tok/s "
+          f"p99_tbt={m.p99_tbt()*1e3:.1f}ms")
+    if m.per_class:
+        print(f"{'class':<12} {'offered':>7} {'done':>5} {'rej':>4} "
+              f"{'ttft_p50':>9} {'ttft_p99':>9} {'tbt_p99':>8} "
+              f"{'goodput':>8} {'attain':>6}")
+        for name in sorted(m.per_class):
+            c = m.per_class[name]
+            print(f"{name:<12} {c.offered:>7} {c.completed:>5} "
+                  f"{c.rejected:>4} {c.ttft_p50:>8.3f}s {c.ttft_p99:>8.3f}s "
+                  f"{c.tbt_p99*1e3:>6.1f}ms {c.goodput:>8.1f} "
+                  f"{c.attainment:>6.2f}")
+
+
+def serve_engine(args) -> SessionMetrics:
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+    from repro.sim.policies import DynaServePolicy
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mix = parse_slo_mix(args.slo_mix)
+    reqs = mini_trace(args.requests, args.qps, args.seed, mix,
+                      p_max=args.prompt_len, d_max=args.max_new)
+    backend = EngineBackend(cfg, params, n_slots=max(8, 2 * args.requests),
+                            max_len=args.prompt_len + args.max_new + 32)
+    policy = DynaServePolicy(backend.cost, args.slo)
+    session = ServeSession(backend, policy, SessionConfig(
+        n_instances=args.instances, slo=args.slo,
+        admission=args.admission, open_loop=args.open_loop))
+    m = session.run(reqs)
+    report(m, f"engine backend ({cfg.name}), "
+              f"{'open' if args.open_loop else 'closed'}-loop, "
+              f"admission={'on' if args.admission else 'off'}")
+    if not args.admission and m.completed != m.offered:
+        raise SystemExit(f"smoke failure: {m.offered - m.completed} "
+                         f"request(s) did not complete")
+    return m
+
+
+def serve_sim(args) -> SessionMetrics:
+    from repro.configs import get_config
+    from repro.core.elastic import ElasticConfig
+    from repro.sim.policies import DynaServePolicy, ElasticDynaServePolicy
+
+    cost = BatchCostModel(get_config(args.arch), A100)
+    mix = parse_slo_mix(args.slo_mix)
+    reqs = generate_trace(args.workload, args.qps, args.duration,
+                          seed=args.seed, slo_mix=mix)
+    if args.policy == "elastic":
+        policy = ElasticDynaServePolicy(
+            cost, args.slo,
+            elastic=ElasticConfig(min_instances=max(1, args.instances // 2),
+                                  max_instances=2 * args.instances))
+    else:
+        policy = DynaServePolicy(cost, args.slo)
+    session = ServeSession(SimBackend(cost), policy, SessionConfig(
+        n_instances=args.instances, slo=args.slo,
+        admission=args.admission))
+    m = session.run(reqs)
+    report(m, f"sim backend, {args.workload} @ {args.qps} qps, "
+              f"policy={args.policy}, "
+              f"admission={'on' if args.admission else 'off'}")
+    return m
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["sim", "engine"], default=None,
+                    help="default: engine with --smoke, sim otherwise")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model + tiny trace (CI-sized)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="honor arrival timestamps on the wall clock "
+                         "(engine backend; the simulator is always "
+                         "arrival-driven)")
     ap.add_argument("--arch", default="qwen2.5-14b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--slo", type=float, default=0.100,
+                    help="default TBT SLO for unclassed requests (s)")
+    ap.add_argument("--slo-mix",
+                    default="interactive=0.4,standard=0.4,batch=0.2",
+                    help="class=weight list; empty string = unclassed")
+    ap.add_argument("--admission", action="store_true",
+                    help="enable TTFT-predicting admission control")
+    ap.add_argument("--seed", type=int, default=0)
+    # engine-backend knobs
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--no-split", action="store_true",
-                    help="colocation mode (no micro-request splitting)")
+    # sim-backend knobs
+    ap.add_argument("--workload", default="burstgpt")
+    ap.add_argument("--qps", type=float, default=2.0)
+    ap.add_argument("--duration", type=float, default=30.0)
+    ap.add_argument("--policy", choices=["dyna", "elastic"], default="dyna")
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    cluster = ServingCluster(cfg, params, n_instances=args.instances,
-                             n_slots=max(8, args.requests),
-                             max_len=args.prompt_len + args.max_new + 32,
-                             split=not args.no_split)
-    rng = np.random.default_rng(0)
-    t0 = time.time()
-    reqs = [cluster.submit(
-        rng.integers(0, cfg.vocab_size, rng.integers(8, args.prompt_len)),
-        args.max_new) for _ in range(args.requests)]
-    cluster.run_until_done(reqs)
-    dt = time.time() - t0
-    total = sum(len(r.generated) for r in reqs)
-    print(f"arch={cfg.name} requests={len(reqs)} tokens={total} "
-          f"wall={dt:.2f}s ({total/dt:.1f} tok/s on CPU) "
-          f"kv_handoff={cluster.kv_bytes_moved} bytes")
-    for r in reqs[:4]:
-        print(f"  {r.req.rid}: P={r.req.P} -> {r.generated[:8]}...")
+    backend = args.backend or ("engine" if args.smoke else "sim")
+    if backend == "engine":
+        serve_engine(args)
+    else:
+        serve_sim(args)
     return 0
 
 

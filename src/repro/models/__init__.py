@@ -1,0 +1,1 @@
+"""Model zoo: configs, layers, mixers, forward pass."""

@@ -1,4 +1,6 @@
-from repro.sim.simulator import ClusterSim, SimConfig, SimMetrics  # noqa: F401
+from repro.sim.simulator import (  # noqa: F401
+    ClusterSim, SessionStallError, SimBackend, SimConfig, SimMetrics,
+)
 from repro.sim.policies import (  # noqa: F401
     ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
     ElasticDynaServePolicy,

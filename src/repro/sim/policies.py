@@ -19,6 +19,7 @@ from repro.core.kv_transfer import monolithic_exposed, plan_chunked_transfer
 from repro.core.local_scheduler import LocalScheduler
 from repro.core.predictor import QueuedWork
 from repro.core.request import MicroRequest, Request, split_request
+from repro.core.session import MicroState as SimMicro, queued_view
 
 
 class BasePolicy:
@@ -37,16 +38,17 @@ class BasePolicy:
     def on_micro_finished(self, m, sim, now: float) -> None:
         pass
 
+    def on_cancel(self, rid: str, sim) -> None:
+        """Drop pending-beta registrations of a cancelled (or
+        rejected-at-placement) request so no orphaned handoff fires."""
+        pending = getattr(self, "_pending_beta", None)
+        if pending:
+            for key in [k for k in pending if k.startswith(rid + "/")]:
+                pending.pop(key, None)
+
     # helpers ------------------------------------------------------------
-    @staticmethod
-    def _queued_view(inst) -> List[QueuedWork]:
-        out = []
-        for m in inst.prefill_q:
-            out.append(QueuedWork(m.rid, m.prefill_remaining,
-                                  m.decode_remaining, m.pos))
-        for m in inst.decode_q:
-            out.append(QueuedWork(m.rid, 0, m.decode_remaining, m.pos))
-        return out
+    # one QueuedWork projection shared with the session's admission path
+    _queued_view = staticmethod(queued_view)
 
 
 # ==========================================================================
@@ -63,7 +65,6 @@ class ColocationPolicy(BasePolicy):
                               static_chunk=self.chunk)
 
     def place(self, r: Request, sim, now: float):
-        from repro.sim.simulator import SimMicro
         iid = self._rr % len(sim.instances)
         self._rr += 1
         mr = MicroRequest(r, "alpha", 0, r.true_L)
@@ -91,7 +92,6 @@ class DisaggregationPolicy(BasePolicy):
                               static_chunk=self.prefill_chunk)
 
     def place(self, r: Request, sim, now: float):
-        from repro.sim.simulator import SimMicro
         n = len(sim.instances)
         n_p = max(1, n // 2)
         ip = self._rr_p % n_p
@@ -110,7 +110,7 @@ class DisaggregationPolicy(BasePolicy):
         if b is not None:
             exposed = monolithic_exposed(sim.cost, m.mr.end)
             nbytes = sim.cost.kv_transfer_bytes(m.mr.end)
-            sim.release_beta(b, now + exposed, exposed, nbytes)
+            sim.release_beta(b, now + exposed, exposed, nbytes, src=m)
 
 
 # ==========================================================================
@@ -144,7 +144,6 @@ class DynaServePolicy(BasePolicy):
                 for i in sim.pool_instances()]
 
     def place(self, r: Request, sim, now: float):
-        from repro.sim.simulator import SimMicro
         if self.split_mode == "none":
             iid = self._rr % len(sim.instances)
             self._rr += 1
@@ -167,6 +166,11 @@ class DynaServePolicy(BasePolicy):
         true_L = r.true_L
         if pl.alpha is not None:
             a_end = min(pl.alpha.end, true_L)
+            if pl.beta is None or pl.beta.start >= true_L:
+                # the final micro absorbs decode-length under-prediction:
+                # generation does not stop at the predicted end, so the
+                # tail extends to the true length instead of truncating
+                a_end = true_L
             if a_end > 0:
                 mr = MicroRequest(r, "alpha", 0, a_end)
                 sm = SimMicro(mr, mr.prefill_tokens, mr.decode_tokens, 0)
@@ -189,13 +193,14 @@ class DynaServePolicy(BasePolicy):
         if b is not None:
             if b.iid == m.iid:
                 # migration co-located the pair: the KV never crosses a
-                # link, so the handoff is free
-                sim.release_beta(b, now, 0.0, 0.0)
+                # link, so the handoff is free (real backends still copy
+                # between slots of the one engine)
+                sim.release_beta(b, now, 0.0, 0.0, src=m)
                 return
             plan = plan_chunked_transfer(sim.cost, m.mr.end,
                                          self.transfer_chunk)
             sim.release_beta(b, now + plan.exposed, plan.exposed,
-                             plan.total_bytes)
+                             plan.total_bytes, src=m)
 
 
 # ==========================================================================

@@ -1,12 +1,18 @@
-"""Discrete-event cluster simulator.
+"""Discrete-event cluster simulation backend.
 
-Replays a request trace against N instances whose per-batch latency comes
-from the analytic ``BatchCostModel`` — the same model the global
+The arrival→place→batch→handoff→finish loop lives in
+``repro.core.session.ServeSession`` — shared verbatim with the real JAX
+engine backend (``repro.engine.backend.EngineBackend``).  This module
+supplies only the simulated *substrate*: a virtual clock and per-batch
+latency from the analytic ``BatchCostModel`` — the same model the global
 scheduler's predictor uses, so the paper's two-level scheduling runs
 unmodified on top.  Reproduces the paper's evaluation (goodput vs QPS,
-serving capacity, SLO attainment, replay) without GPUs; the *real* JAX
-engine (repro.engine) is exercised by the end-to-end integration tests
-instead.
+serving capacity, SLO attainment, replay) without GPUs.
+
+``ClusterSim`` is the simulator-flavoured session: construct with
+``(cost, policy, SimConfig)`` and ``run(trace)`` — exactly the seed API,
+now including online-serving features (SLO classes, admission control,
+streaming handles, ``cancel``) because the driver is shared.
 
 The instance pool is dynamic: policies with an ``on_pool_check`` hook get
 a periodic pool-control event and may ``add_instance`` / ``drain_instance``
@@ -16,455 +22,50 @@ the old behaviour.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Sequence, Tuple
 
 from repro.core.costmodel import BatchCostModel, WorkItem
-from repro.core.local_scheduler import (
-    BatchPlan, DecodeWork, LocalScheduler, PrefillWork,
+from repro.core.session import (
+    Backend, ExecResult, InstanceState, MicroState, ReqState, ServeHandle,
+    ServeSession, SessionConfig, SessionMetrics, SessionStallError,
 )
-from repro.core.request import MicroRequest, Request
+
+# Seed-era names: the runtime state classes moved into the shared driver.
+SimConfig = SessionConfig
+SimMetrics = SessionMetrics
+SimMicro = MicroState
+SimInstance = InstanceState
+
+__all__ = [
+    "ClusterSim", "SimBackend", "SimConfig", "SimMetrics", "SimMicro",
+    "SimInstance", "SessionStallError", "ServeHandle", "ReqState",
+]
 
 
-@dataclasses.dataclass
-class SimConfig:
-    n_instances: int = 2
-    slo: float = 0.100
-    max_sim_time: float = 10_000.0
-    warmup: float = 5.0
-    hbm_bytes: float = 80e9        # A100-80G, for utilization accounting
-    record_util: bool = False
+class SimBackend(Backend):
+    """Virtual-clock substrate: batches take ``BatchCostModel.latency``
+    simulated seconds and complete as deferred events, so concurrent
+    instances overlap in simulated time.  No real tokens are produced
+    (streaming handles receive output positions)."""
 
+    virtual_clock = True
+    emits_tokens = False
+    max_chunk = None
 
-@dataclasses.dataclass(eq=False)
-class SimMicro:
-    """Runtime state of one micro-request on an instance."""
-    mr: MicroRequest
-    prefill_remaining: int
-    decode_remaining: int
-    pos: int                       # next absolute token position
-    ready: float = 0.0
-    iid: int = -1
-
-    @property
-    def rid(self) -> str:
-        return self.mr.rid
-
-
-class SimInstance:
-    def __init__(self, iid: int, scheduler: LocalScheduler,
-                 role: str = "unified", spawned_at: float = 0.0):
-        self.iid = iid
-        self.scheduler = scheduler
-        self.role = role           # unified | prefill | decode
-        self.prefill_q: List[SimMicro] = []
-        self.decode_q: List[SimMicro] = []
-        self.busy = False
-        self.in_flight: set = set()    # micros inside the running batch
-        # elastic lifecycle: active segments [(start, end|None), ...]
-        self.draining = False
-        self.retired = False
-        self.segments: List[List[Optional[float]]] = [[spawned_at, None]]
-        # accounting
-        self.busy_time = 0.0
-        self.flops_done = 0.0
-        self.bytes_done = 0.0
-        self.kv_tokens_resident = 0
-
-    @property
-    def role_bias(self) -> float:
-        return getattr(self.scheduler, "role_bias", 0.0)
-
-    @property
-    def n_queued(self) -> int:
-        return len(self.prefill_q) + len(self.decode_q)
-
-    def has_work(self, now: float) -> bool:
-        return any(m.ready <= now for m in self.prefill_q) or \
-            any(m.ready <= now for m in self.decode_q)
-
-    def active_seconds(self, horizon: float) -> float:
-        return sum((end if end is not None else horizon) - start
-                   for start, end in self.segments)
-
-
-@dataclasses.dataclass
-class ReqState:
-    req: Request
-    token_times: List[float] = dataclasses.field(default_factory=list)
-    ttft: Optional[float] = None
-    done_at: Optional[float] = None
-    micro_done: int = 0
-    n_micro: int = 1
-
-
-@dataclasses.dataclass
-class SimMetrics:
-    duration: float
-    completed: int
-    offered: int
-    tokens_total: int
-    tokens_in_slo: int
-    tbts: np.ndarray
-    ttfts: np.ndarray
-    req_attained: float           # fraction of requests with max TBT <= SLO
-    scheduling_overheads: np.ndarray
-    per_instance_busy: List[float]
-    per_instance_mfu: List[float]
-    per_instance_hbm: List[float]
-    transfer_exposed_total: float
-    transfer_bytes_total: float
-    goodput_window: Optional[List[Tuple[float, float]]] = None
-    # elastic-pool accounting
-    instance_seconds: float = 0.0       # sum of per-instance active time
-    n_instances_peak: int = 0
-    n_instances_final: int = 0
-    migrations: int = 0
-    migration_bytes: float = 0.0
-    pool_events: List[Tuple[float, str]] = dataclasses.field(
-        default_factory=list)
-
-    @property
-    def goodput(self) -> float:
-        return self.tokens_in_slo / self.duration
-
-    @property
-    def throughput_tokens(self) -> float:
-        return self.tokens_total / self.duration
-
-    @property
-    def throughput_rps(self) -> float:
-        return self.completed / self.duration
-
-    @property
-    def token_attainment(self) -> float:
-        return self.tokens_in_slo / max(1, self.tokens_total)
-
-    @property
-    def goodput_per_instance_second(self) -> float:
-        """SLO-attaining tokens per instance-second — the elastic pool's
-        efficiency metric (fixed-N pays for idle valleys)."""
-        return self.tokens_in_slo / max(1e-9, self.instance_seconds)
-
-    def p99_tbt(self) -> float:
-        return float(np.percentile(self.tbts, 99)) if len(self.tbts) else 0.0
-
-    def p50_tbt(self) -> float:
-        return float(np.percentile(self.tbts, 50)) if len(self.tbts) else 0.0
-
-
-class ClusterSim:
-    def __init__(self, cost: BatchCostModel, policy, sim_cfg: SimConfig):
+    def __init__(self, cost: BatchCostModel):
         self.cost = cost
-        self.policy = policy
-        self.cfg = sim_cfg
-        self.instances = [
-            SimInstance(i, policy.make_local_scheduler(i, cost, sim_cfg.slo),
-                        policy.role_of(i, sim_cfg.n_instances))
-            for i in range(sim_cfg.n_instances)
-        ]
-        self.req_states: Dict[str, ReqState] = {}
-        self._events: List[Tuple[float, int, str, object]] = []
-        self._seq = 0
-        self._arrivals_left = 0
-        self._open_requests = 0
-        self.now = 0.0
-        self.transfer_exposed = 0.0
-        self.transfer_bytes = 0.0
-        self.migrations = 0
-        self.migration_bytes = 0.0
-        self.n_instances_peak = sim_cfg.n_instances
-        self.pool_events: List[Tuple[float, str]] = []
-        self.sched_overheads: List[float] = []
 
-    # ---------------- event plumbing ----------------
-    def _push(self, t: float, kind: str, payload) -> None:
-        self._seq += 1
-        heapq.heappush(self._events, (t, self._seq, kind, payload))
+    def execute(self, inst: InstanceState,
+                grants: Sequence[Tuple[MicroState, int]],
+                decs: Sequence[MicroState]) -> ExecResult:
+        items: List[WorkItem] = \
+            [WorkItem("prefill", g, m.pos) for m, g in grants] + \
+            [WorkItem("decode", 1, m.pos) for m in decs]
+        return ExecResult(latency=self.cost.latency(items), deferred=True)
 
-    # ---------------- public API ----------------
-    def run(self, requests: Sequence[Request]) -> SimMetrics:
-        for r in requests:
-            self._push(r.arrival, "arrival", r)
-        self._arrivals_left = len(requests)
-        interval = getattr(self.policy, "pool_interval", 0.0)
-        if interval and hasattr(self.policy, "on_pool_check"):
-            self._push(interval, "pool", interval)
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            if t > self.cfg.max_sim_time:
-                break
-            self.now = t
-            if kind == "arrival":
-                self._on_arrival(payload)
-            elif kind == "batch_done":
-                self._on_batch_done(payload)
-            elif kind == "kick":
-                self._maybe_start_batch(self.instances[payload])
-            elif kind == "pool":
-                self.policy.on_pool_check(self, self.now)
-                if self._arrivals_left > 0 or self._open_requests > 0:
-                    self._push(self.now + payload, "pool", payload)
-        return self._metrics(requests)
 
-    # ---------------- elastic pool lifecycle ----------------
-    def active_instances(self) -> List[SimInstance]:
-        return [i for i in self.instances if not i.draining and not i.retired]
+class ClusterSim(ServeSession):
+    """The simulator entry point: a ``ServeSession`` over ``SimBackend``."""
 
-    def pool_instances(self) -> List[SimInstance]:
-        """Members still holding or receiving work (not yet retired)."""
-        return [i for i in self.instances if not i.retired]
-
-    def add_instance(self) -> SimInstance:
-        """Scale up: cancel an in-flight drain (warmest), revive a
-        retired member (profile table stays warm), or append a fresh
-        one — in that order, so the pool never exceeds its cap while a
-        drain is still completing."""
-        inst = next((i for i in self.instances
-                     if i.draining and not i.retired), None)
-        if inst is not None:
-            inst.draining = False
-            label = "undrain"
-        else:
-            inst = next((i for i in self.instances if i.retired), None)
-            if inst is not None:
-                inst.retired = False
-                inst.draining = False
-                inst.segments.append([self.now, None])
-                label = "revive"
-            else:
-                iid = len(self.instances)
-                inst = SimInstance(
-                    iid,
-                    self.policy.make_local_scheduler(iid, self.cost,
-                                                     self.cfg.slo),
-                    self.policy.role_of(iid, iid + 1), spawned_at=self.now)
-                self.instances.append(inst)
-                label = "attach"
-        self.pool_events.append((self.now, f"{label} {inst.iid}"))
-        self.n_instances_peak = max(self.n_instances_peak,
-                                    len(self.active_instances()))
-        return inst
-
-    def drain_instance(self, iid: int) -> None:
-        """Scale down: stop placing work on ``iid``; it retires once its
-        queues empty (no request is ever dropped)."""
-        inst = self.instances[iid]
-        if inst.retired or inst.draining:
-            return
-        inst.draining = True
-        self.pool_events.append((self.now, f"drain {iid}"))
-        self._maybe_retire(inst)
-
-    def _maybe_retire(self, inst: SimInstance) -> None:
-        if inst.draining and not inst.busy and inst.n_queued == 0:
-            inst.draining = False
-            inst.retired = True
-            inst.segments[-1][1] = self.now
-            self.pool_events.append((self.now, f"retire {inst.iid}"))
-
-    def migrate(self, src_iid: int, dst_iid: int, max_micros: int) -> int:
-        """Move up to ``max_micros`` queued (not in-flight) micro-requests
-        from a hot instance to a cold one.  A micro that already computed
-        KV on the source pays the (window-aware) KV move on the
-        inter-instance link before it becomes runnable on the
-        destination; nothing overlaps it, so the move is fully exposed."""
-        src, dst = self.instances[src_iid], self.instances[dst_iid]
-        moved = 0
-
-        # a waiting beta has no KV yet (its handoff redirects to the new
-        # home); anything started owns KV for every position < pos
-        def resident_kv(m: SimMicro) -> int:
-            return 0 if m.ready == float("inf") else m.pos
-
-        # cheapest moves first: least resident KV on the source
-        candidates = sorted(
-            (m for m in src.prefill_q + src.decode_q
-             if m not in src.in_flight),
-            key=resident_kv)
-        for m in candidates:
-            if moved >= max_micros:
-                break
-            q_src = src.prefill_q if m in src.prefill_q else src.decode_q
-            q_dst = dst.prefill_q if q_src is src.prefill_q else dst.decode_q
-            q_src.remove(m)
-            resident = resident_kv(m)
-            if resident > 0:
-                nbytes = self.cost.kv_transfer_bytes(resident)
-                delay = self.cost.kv_transfer_time(resident)
-                m.ready = max(m.ready, self.now + delay)
-                self.migration_bytes += nbytes
-                self.transfer_bytes += nbytes
-                self.transfer_exposed += delay
-            m.iid = dst_iid
-            q_dst.append(m)
-            moved += 1
-            # wake the destination when the micro actually becomes
-            # runnable (a waiting beta is woken by release_beta instead)
-            if m.ready != float("inf"):
-                self._push(max(self.now, m.ready), "kick", dst_iid)
-        if moved:
-            self.migrations += moved
-            self._maybe_retire(src)
-        return moved
-
-    # ---------------- arrival ----------------
-    def _on_arrival(self, r: Request) -> None:
-        self._arrivals_left -= 1
-        placements = self.policy.place(r, self, self.now)
-        st = ReqState(r, n_micro=len(placements))
-        self.req_states[r.rid] = st
-        self._open_requests += 1
-        if hasattr(self.policy, "last_overhead"):
-            self.sched_overheads.append(self.policy.last_overhead)
-        for inst_id, sm in placements:
-            sm.iid = inst_id
-            inst = self.instances[inst_id]
-            if sm.prefill_remaining > 0:
-                inst.prefill_q.append(sm)
-            elif sm.decode_remaining > 0:
-                inst.decode_q.append(sm)
-            self._maybe_start_batch(inst)
-
-    # ---------------- batching ----------------
-    def _maybe_start_batch(self, inst: SimInstance) -> None:
-        if inst.busy or not inst.has_work(self.now):
-            return
-        pf = [m for m in inst.prefill_q if m.ready <= self.now]
-        dc = [m for m in inst.decode_q if m.ready <= self.now]
-        if inst.role == "prefill":
-            dc = []
-        if inst.role == "decode":
-            pf = []
-        pworks = [PrefillWork(m.rid, m.prefill_remaining, m.pos) for m in pf]
-        dworks = [DecodeWork(m.rid, m.pos) for m in dc]
-        plan = inst.scheduler.next_batch(pworks, dworks)
-        if not plan.decodes and not plan.prefills:
-            return
-        # map back to SimMicro
-        by_rid = {m.rid: m for m in pf + dc}
-        grants = [(by_rid[w.rid], g) for w, g in plan.prefills]
-        decs = [by_rid[w.rid] for w in plan.decodes]
-        inst.in_flight = {m for m, _ in grants} | set(decs)
-        items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
-                 [WorkItem("decode", 1, m.pos) for m in decs])
-        lat = self.cost.latency(items)
-        inst.busy = True
-        inst.busy_time += lat
-        inst.flops_done += self.cost.flops(items)
-        inst.bytes_done += self.cost.bytes_moved(items)
-        self._push(self.now + lat, "batch_done",
-                   (inst.iid, grants, decs, plan, lat))
-
-    def _on_batch_done(self, payload) -> None:
-        iid, grants, decs, plan, lat = payload
-        inst = self.instances[iid]
-        inst.busy = False
-        inst.in_flight = set()
-        inst.scheduler.record(plan, lat)
-        # prefill progress
-        for m, g in grants:
-            m.prefill_remaining -= g
-            m.pos += g
-            if m.prefill_remaining <= 0:
-                inst.prefill_q.remove(m)
-                st = self.req_states[m.mr.parent.rid]
-                # the forward pass that consumed the last prompt token
-                # emitted the first output token
-                if m.pos >= m.mr.parent.P and st.ttft is None:
-                    st.ttft = self.now - m.mr.parent.arrival
-                if m.decode_remaining > 0:
-                    inst.decode_q.append(m)
-                else:
-                    self._micro_finished(m)
-        # decode progress: every decode in the batch emitted one token
-        for m in decs:
-            m.decode_remaining -= 1
-            m.pos += 1
-            st = self.req_states[m.mr.parent.rid]
-            st.token_times.append(self.now)
-            if m.decode_remaining <= 0:
-                inst.decode_q.remove(m)
-                self._micro_finished(m)
-        self._maybe_start_batch(inst)
-        self._maybe_retire(inst)
-
-    # ---------------- micro-request lifecycle ----------------
-    def _micro_finished(self, m: SimMicro) -> None:
-        st = self.req_states[m.mr.parent.rid]
-        st.micro_done += 1
-        self.policy.on_micro_finished(m, self, self.now)
-        if st.micro_done >= st.n_micro and st.done_at is None:
-            st.done_at = self.now
-            self._open_requests -= 1
-
-    def release_beta(self, beta: SimMicro, ready: float,
-                     exposed: float, nbytes: float) -> None:
-        """Called by the policy when alpha completes: beta becomes
-        runnable after the (possibly chunk-overlapped) KV handoff."""
-        self.transfer_exposed += exposed
-        self.transfer_bytes += nbytes
-        beta.ready = ready
-        inst = self.instances[beta.iid]
-        self._push(ready, "kick", beta.iid)
-
-    # ---------------- metrics ----------------
-    def _metrics(self, requests: Sequence[Request]) -> SimMetrics:
-        slo = self.cfg.slo
-        tbts: List[float] = []
-        ttfts: List[float] = []
-        tok_total = 0
-        tok_in = 0
-        req_ok = 0
-        completed = 0
-        t_end = max((st.done_at or self.now) for st in self.req_states.values()) \
-            if self.req_states else self.now
-        duration = max(t_end, 1e-9)
-        for st in self.req_states.values():
-            if st.done_at is None:
-                continue
-            completed += 1
-            if st.ttft is not None:
-                ttfts.append(st.ttft)
-            ts = st.token_times
-            gaps = [b - a for a, b in zip(ts, ts[1:])]
-            tbts.extend(gaps)
-            tok_total += len(ts)
-            ok = sum(1 for g in gaps if g <= slo) + (1 if ts else 0)
-            tok_in += ok
-            if all(g <= slo for g in gaps):
-                req_ok += 1
-        mfu, hbm, busy = [], [], []
-        inst_seconds = 0.0
-        for inst in self.instances:
-            mfu.append(inst.flops_done / max(duration, 1e-9) / self.cost.hw.peak_flops)
-            hbm.append(min(1.0, (self.cost.weight_bytes +
-                                 inst.kv_tokens_resident * self.cost.kv_bytes_per_tok)
-                           / self.cfg.hbm_bytes))
-            busy.append(inst.busy_time / max(duration, 1e-9))
-            inst_seconds += inst.active_seconds(duration)
-        return SimMetrics(
-            duration=duration,
-            completed=completed,
-            offered=len(requests),
-            tokens_total=tok_total,
-            tokens_in_slo=tok_in,
-            tbts=np.asarray(tbts),
-            ttfts=np.asarray(ttfts),
-            req_attained=req_ok / max(1, completed),
-            scheduling_overheads=np.asarray(self.sched_overheads),
-            per_instance_busy=busy,
-            per_instance_mfu=mfu,
-            per_instance_hbm=hbm,
-            transfer_exposed_total=self.transfer_exposed,
-            transfer_bytes_total=self.transfer_bytes,
-            instance_seconds=inst_seconds,
-            n_instances_peak=self.n_instances_peak,
-            n_instances_final=len(self.active_instances()),
-            migrations=self.migrations,
-            migration_bytes=self.migration_bytes,
-            pool_events=list(self.pool_events),
-        )
+    def __init__(self, cost: BatchCostModel, policy, sim_cfg: SimConfig):
+        super().__init__(SimBackend(cost), policy, sim_cfg)

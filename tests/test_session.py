@@ -1,0 +1,377 @@
+"""Online serving API: one ServeSession driver over both backends.
+
+Covers the request lifecycle (streaming order/completeness, mid-flight
+cancel with slot + pending-beta cleanup, admission rejection under
+overload), SLO-class plumbing into both schedulers, stall detection,
+and the acceptance criterion that the simulator and the engine cluster
+run the SAME trace through the IDENTICAL session/event-loop driver.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import A100, BatchCostModel
+from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
+from repro.core.request import (
+    BATCH, INTERACTIVE, Request, RequestState, SLOClass, STANDARD,
+)
+from repro.core.session import (
+    ServeSession, SessionConfig, SessionStallError,
+)
+from repro.data import generate_trace
+from repro.sim.policies import ColocationPolicy, DynaServePolicy
+from repro.sim.simulator import ClusterSim, SimBackend, SimConfig
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+def _tiny_trace(n=6, seed=0, slo=None):
+    rng = np.random.default_rng(seed)
+    return [Request(f"t-{i}", round(i * 0.03, 3), int(rng.integers(12, 40)),
+                    int(rng.integers(4, 9)), slo=slo) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# one driver, two backends
+# ---------------------------------------------------------------------------
+def test_same_trace_through_both_backends_via_one_driver(cost):
+    """Acceptance: ClusterSim and the engine cluster share the session
+    driver — the identical ServeSession.run() consumes the same trace on
+    both substrates and both complete it with all tokens delivered."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    trace = _tiny_trace()
+
+    sim_session = ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                               SessionConfig(n_instances=2))
+    assert sim_session.run.__func__ is ServeSession.run
+    m_sim = sim_session.run([  # fresh Request objects (state is mutable)
+        Request(r.rid, r.arrival, r.P, r.D) for r in trace])
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend(cfg, params, n_slots=2 * len(trace),
+                            max_len=128)
+    eng_session = ServeSession(backend, DynaServePolicy(backend.cost),
+                               SessionConfig(n_instances=2))
+    # the two sessions literally share the driver code
+    assert type(eng_session).run is type(sim_session).run is ServeSession.run
+    m_eng = eng_session.run(trace)
+
+    for m in (m_sim, m_eng):
+        assert m.completed == len(trace)
+        assert m.tokens_total == sum(r.D for r in trace)
+    # every engine request streamed exactly its D real tokens
+    for r in trace:
+        assert len(backend.records[r.rid].generated) == r.D
+        assert r.state == RequestState.DONE
+
+
+def test_clustersim_is_a_serve_session(cost):
+    sim = ClusterSim(cost, DynaServePolicy(cost), SimConfig(n_instances=2))
+    assert isinstance(sim, ServeSession)
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+def test_streaming_matches_run_until_done_engine():
+    """Order + completeness: tokens iterated from a streaming handle are
+    exactly what the legacy blocking surface produces."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.cluster import ServingCluster
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (33, 17, 25)]
+
+    ref = ServingCluster(cfg, params, n_instances=2, max_len=128)
+    refs = [ref.submit(p, 8) for p in prompts]
+    ref.run_until_done(refs)
+
+    dyn = ServingCluster(cfg, params, n_instances=2, max_len=128)
+    handles = [dyn.session.generate(p, 8, rid=f"s{i}")
+               for i, p in enumerate(prompts)]
+    streamed = [list(h) for h in handles]      # pumps the event loop
+    for got, want in zip(streamed, refs):
+        assert got == want.generated
+        assert len(got) == 8
+    assert all(h.state == RequestState.DONE for h in handles)
+
+
+def test_streaming_on_sim_backend(cost):
+    session = ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                           SessionConfig(n_instances=2))
+    h = session.generate(prompt_len=64, decode_len=16)
+    toks = list(h)                              # synthetic: positions
+    assert len(toks) == 16
+    assert toks == sorted(toks)
+    assert h.state == RequestState.DONE
+    assert session.req_states[h.rid].ttft is not None
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+def test_cancel_mid_flight_sim_cleans_pending_beta(cost):
+    """Cancel while the alpha is running: queued micros leave every
+    queue, the pending beta handoff is aborted (no orphaned KV wait),
+    and other requests still complete without a stall."""
+    policy = DynaServePolicy(cost)
+    session = ServeSession(SimBackend(cost), policy,
+                           SessionConfig(n_instances=2))
+    victim = session.generate(prompt_len=4000, decode_len=600,
+                              rid="victim")
+    other = session.generate(prompt_len=512, decode_len=32, rid="other")
+    for _ in range(3):                          # let the alpha start
+        session._pump()
+    assert session.cancel("victim")
+    assert victim.state == RequestState.CANCELLED
+    assert not any(k.startswith("victim/") for k in policy._pending_beta)
+    rest = list(other)
+    assert len(rest) == 32
+    for inst in session.instances:
+        assert not any(m.mr.parent.rid == "victim"
+                       for m in inst.prefill_q + inst.decode_q
+                       if not m.cancelled)
+    m = session.metrics()
+    assert m.cancelled == 1 and m.completed == 1
+    # cancelling again (or a finished request) is a no-op
+    assert not session.cancel("victim")
+    assert not session.cancel("other")
+
+
+def test_cancel_mid_flight_engine_frees_slots():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.cluster import ServingCluster
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    cluster = ServingCluster(cfg, params, n_instances=2, n_slots=4,
+                             max_len=128)
+    victim = cluster.submit(rng.integers(0, cfg.vocab_size, 30), 20,
+                            rid="victim")
+    keeper = cluster.submit(rng.integers(0, cfg.vocab_size, 20), 6,
+                            rid="keeper")
+    for _ in range(4):                          # victim decodes a bit
+        cluster.session._pump()
+    assert cluster.cancel("victim")
+    cluster.run_until_done([keeper])            # no stall from the abort
+    assert len(keeper.generated) == 6
+    assert len(victim.generated) < 20
+    assert victim.state == RequestState.CANCELLED
+    # no orphaned KV slots: every engine is back to fully free
+    assert not cluster.backend._slots
+    for eng in cluster.engines.values():
+        assert eng.n_free == eng.n_slots
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_admission_rejects_under_overload_sim(cost):
+    session = ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                           SessionConfig(n_instances=1, admission=True))
+    # a 2000-token prefill fits the 0.5s interactive TTFT on an idle
+    # instance but not behind a queue — so the flood sheds its tail
+    handles = [session.generate(prompt_len=2000, decode_len=64,
+                                slo=INTERACTIVE, rid=f"h{i}")
+               for i in range(12)]             # flood without pumping
+    states = {h.state for h in handles}
+    assert RequestState.REJECTED in states      # load was shed...
+    survivors = [h for h in handles if h.state != RequestState.REJECTED]
+    assert survivors                            # ...but not everything
+    for h in survivors:
+        assert len(list(h)) == 64
+    m = session.metrics()
+    assert m.rejected == len(handles) - len(survivors)
+    assert m.per_class["interactive"].rejected == m.rejected
+
+
+def test_admission_rejects_on_engine_backend():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.cluster import ServingCluster
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    cluster = ServingCluster(cfg, params, n_instances=1, max_len=128,
+                             admission=True)
+    tight = SLOClass("tight", ttft=1e-9, tbt=1.0)
+    h = cluster.submit(rng.integers(0, cfg.vocab_size, 24), 4, slo=tight)
+    assert h.state == RequestState.REJECTED
+    assert list(h) == []                        # stream closes cleanly
+    # batch-class requests are never rejected
+    h2 = cluster.submit(rng.integers(0, cfg.vocab_size, 24), 4, slo=BATCH)
+    assert list(h2) != [] and h2.state == RequestState.DONE
+
+
+def test_slot_exhaustion_sheds_instead_of_stalling():
+    """Satellite: a pool with no free slots must reject, not spin."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend(cfg, params, n_slots=1, max_len=128)
+    session = ServeSession(backend, ColocationPolicy(chunk=64,
+                                                     slo_aware=False),
+                           SessionConfig(n_instances=1))
+    rng = np.random.default_rng(0)
+    # occupy the only slot, then keep it busy by not pumping to completion
+    h1 = session.generate(rng.integers(0, cfg.vocab_size, 16), 8)
+    h2 = session.generate(rng.integers(0, cfg.vocab_size, 16), 8)
+    assert h2.state == RequestState.REJECTED
+    assert list(h1) and h1.state == RequestState.DONE
+
+
+# ---------------------------------------------------------------------------
+# stall detection (satellite: the old loop span forever / hung)
+# ---------------------------------------------------------------------------
+class _OrphanPolicy(ColocationPolicy):
+    """Places work that can never become runnable (ready = inf with no
+    releasing handoff) — the shape of the old run_until_done hang."""
+
+    def place(self, r, sim, now):
+        out = super().place(r, sim, now)
+        for _, m in out:
+            m.ready = float("inf")
+        return out
+
+
+def test_stall_raises_instead_of_hanging(cost):
+    reqs = generate_trace("burstgpt", 2.0, 3, seed=0)
+    sim = ClusterSim(cost, _OrphanPolicy(), SimConfig(n_instances=2))
+    with pytest.raises(SessionStallError):
+        sim.run(reqs)
+
+
+def test_streaming_iterator_detects_stall(cost):
+    session = ServeSession(SimBackend(cost), _OrphanPolicy(),
+                           SessionConfig(n_instances=1))
+    h = session.generate(prompt_len=64, decode_len=8)
+    with pytest.raises(SessionStallError):
+        list(h)
+
+
+# ---------------------------------------------------------------------------
+# SLO classes reach the schedulers
+# ---------------------------------------------------------------------------
+def test_slo_class_drives_batch_composition(cost):
+    """The local scheduler's prefill budget must follow the tightest
+    co-batched TBT target instead of the hardcoded default."""
+    ls = LocalScheduler(cost, slo=0.100)
+    pq = [PrefillWork("p", 40_000, 0)]
+    tight = [DecodeWork(f"d{i}", 2048, tbt=INTERACTIVE.tbt)
+             for i in range(8)]
+    loose = [DecodeWork(f"d{i}", 2048, tbt=BATCH.tbt) for i in range(8)]
+    mixed = tight[:4] + loose[:4]
+    m_tight = ls.next_batch(pq, tight).prefill_tokens
+    m_loose = ls.next_batch(pq, loose).prefill_tokens
+    m_mixed = ls.next_batch(pq, mixed).prefill_tokens
+    assert m_loose > m_tight                   # batch-class buys headroom
+    assert m_mixed == m_tight                  # tightest target wins
+
+
+def test_ttft_deadline_orders_prefill_queue(cost):
+    ls = LocalScheduler(cost, slo=0.100)
+    # an urgent late-comer with an earlier deadline jumps the queue
+    pq = [PrefillWork("slow", 4000, 0, deadline=50.0),
+          PrefillWork("urgent", 4000, 0, deadline=1.0)]
+    plan = ls.next_batch(pq, [DecodeWork(f"d{i}", 4096) for i in range(16)])
+    assert plan.prefills and plan.prefills[0][0].rid == "urgent"
+
+
+def test_per_class_metrics_reported(cost):
+    mix = {"interactive": 0.4, "standard": 0.4, "batch": 0.2}
+    reqs = generate_trace("burstgpt", 2.0, 20, seed=1, slo_mix=mix)
+    assert {r.slo.name for r in reqs} <= set(mix)
+    m = ClusterSim(cost, DynaServePolicy(cost),
+                   SimConfig(n_instances=2)).run(reqs)
+    assert m.completed == len(reqs)
+    assert set(m.per_class) <= set(mix)
+    assert sum(c.offered for c in m.per_class.values()) == len(reqs)
+    assert sum(c.tokens for c in m.per_class.values()) == m.tokens_total
+    for c in m.per_class.values():
+        assert c.goodput > 0 and c.ttft_p99 >= c.ttft_p50
+
+
+def test_unretained_sessions_stay_bounded():
+    """retain_finished=False: a long-lived online session drops every
+    per-request record (state, handle, engine prompt/tokens) as requests
+    turn terminal, so memory is bounded by the open-request count."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend(cfg, params, n_slots=4, max_len=96)
+    session = ServeSession(backend, DynaServePolicy(backend.cost),
+                           SessionConfig(n_instances=2,
+                                         retain_finished=False))
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        h = session.generate(rng.integers(0, cfg.vocab_size, 16), 4,
+                             rid=f"g{i}")
+        assert len(list(h)) == 4
+        assert h.rid not in session.req_states
+        assert h.rid not in backend.records
+    assert not session.req_states and not backend.records
+
+
+def test_reused_trace_restarts_lifecycle(cost):
+    """Replaying the same Request objects through a second session (the
+    multi-arm benchmark pattern) must restart their lifecycle rather
+    than inheriting the first run's terminal state."""
+    reqs = _tiny_trace(n=4)
+    m1 = ClusterSim(cost, DynaServePolicy(cost),
+                    SimConfig(n_instances=2)).run(reqs)
+    assert all(r.state == RequestState.DONE for r in reqs)
+    m2 = ClusterSim(cost, DynaServePolicy(cost),
+                    SimConfig(n_instances=2)).run(reqs)
+    assert m2.completed == m1.completed == len(reqs)
+    assert all(r.state == RequestState.DONE for r in reqs)
+    assert all(RequestState.ADMITTED in r.state_times for r in reqs)
+
+
+def test_truncated_run_is_not_reported_as_stall(cost):
+    """A max_sim_time horizon ends the stream cleanly — only a genuine
+    no-progress state raises SessionStallError."""
+    session = ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                           SessionConfig(n_instances=1, max_sim_time=0.5))
+    h = session.generate(prompt_len=4000, decode_len=2000)
+    toks = list(h)                              # ends at the horizon
+    assert h.state != RequestState.DONE
+    assert len(toks) < 2000
+
+
+def test_predictor_noise_is_default_and_tokens_conserved(cost):
+    """Satellite: the sim schedules on predicted lengths by default and
+    under-prediction must not truncate decodes."""
+    reqs = generate_trace("mini_reasoning", 2.0, 15, seed=2)
+    assert any(r.predicted_decode != r.decode_len for r in reqs)
+    oracle = generate_trace("mini_reasoning", 2.0, 15, seed=2,
+                            predict_sigma=0)
+    assert all(r.predicted_decode == r.decode_len for r in oracle)
+    m = ClusterSim(cost, DynaServePolicy(cost),
+                   SimConfig(n_instances=2)).run(reqs)
+    assert m.tokens_total == sum(r.D for r in reqs)
