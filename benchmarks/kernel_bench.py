@@ -1,12 +1,15 @@
 """Kernel micro-bench: Pallas (interpret) vs jnp oracle wall time on CPU,
-plus the analytic TPU-v5e roofline estimate for the production tile."""
+plus the analytic TPU-v5e roofline estimate for the production tile.
+Includes the paged-attention cases the serving engine hot path runs:
+paged decode across page sizes and paged (gathered) chunked prefill."""
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, timed
 from repro.kernels.ops import (
     chunked_prefill_attention_op, chunked_prefill_attention_ref,
-    paged_decode_attention_op, paged_decode_attention_ref,
+    gather_pages, paged_decode_attention_op, paged_decode_attention_ref,
+    paged_prefill_attention_op,
 )
 
 
@@ -41,6 +44,46 @@ def main(csv: Csv | None = None):
     v5e = bytes_moved / 819e9 * 1e6
     csv.add("kernel/paged_decode", us,
             f"ref_us={us_ref:.0f} tpu_v5e_hbm_roofline_us={v5e:.2f}")
+
+    # paged decode across page sizes (the pool-layout tuning knob: small
+    # pages pack ragged requests densely, large pages amortize gathers)
+    for psize in (8, 16, 32):
+        pps = 256 // psize
+        nps = 4 * pps + 4          # room for 4 sequences' disjoint tables
+        kp2 = jnp.asarray(
+            rng.standard_normal((nps, psize, KV, hd)), jnp.float32)
+        vp2 = jnp.asarray(
+            rng.standard_normal((nps, psize, KV, hd)), jnp.float32)
+        tbl2 = jnp.asarray(
+            rng.permutation(nps)[:4 * pps].reshape(4, pps), jnp.int32)
+        lens2 = jnp.full((4,), 256, jnp.int32)
+        _, us = timed(lambda: paged_decode_attention_op(
+            q2, kp2, vp2, tbl2, lens2, interpret=True).block_until_ready())
+        bytes_moved = 2 * 4 * 256 * KV * hd * 4
+        v5e = bytes_moved / 819e9 * 1e6
+        csv.add(f"kernel/paged_decode_p{psize}", us,
+                f"pages_per_seq={pps} tpu_v5e_hbm_roofline_us={v5e:.2f}")
+
+    # paged chunked prefill: micro-request beta resuming mid-prompt
+    # against a block-table pool (gather + chunked kernel)
+    psize, pps = 16, 16
+    nps = 4 * pps + 2
+    Tq2, ctx = 64, 128
+    qp3 = jnp.asarray(rng.standard_normal((4, Tq2, H, hd)), jnp.float32)
+    kp3 = jnp.asarray(rng.standard_normal((nps, psize, KV, hd)), jnp.float32)
+    vp3 = jnp.asarray(rng.standard_normal((nps, psize, KV, hd)), jnp.float32)
+    tbl3 = jnp.asarray(rng.integers(0, nps, (4, pps)), jnp.int32)
+    off3 = jnp.full((4,), ctx, jnp.int32)
+    _, us = timed(lambda: paged_prefill_attention_op(
+        qp3, kp3, vp3, tbl3, off3, bq=32, bk=64,
+        interpret=True).block_until_ready())
+    _, us_ref = timed(lambda: chunked_prefill_attention_ref(
+        qp3, gather_pages(kp3, tbl3), gather_pages(vp3, tbl3),
+        off3).block_until_ready())
+    flops = 4 * 4 * Tq2 * (ctx + Tq2) * H * hd
+    v5e = flops / 197e12 * 1e6
+    csv.add("kernel/paged_prefill", us,
+            f"ref_us={us_ref:.0f} tpu_v5e_roofline_us={v5e:.2f}")
     return csv
 
 

@@ -43,6 +43,11 @@ class ElasticConfig:
     # --- scaling thresholds ---
     scale_up_drain: float = 1.5        # avg predicted drain (s) triggering scale-up
     scale_down_drain: float = 0.45     # avg predicted drain (s) triggering drain
+    # KV memory pressure (fraction of the page pool in use) triggering
+    # scale-up regardless of drain time — a pool can be latency-healthy
+    # yet about to run out of pages for its resident decodes.  Scale-down
+    # and migration *into* a member are vetoed above this level.
+    scale_up_pressure: float = 0.85
     # a pool whose total queued micro-requests fit comfortably on one
     # fewer instance also consolidates (predicted drain alone cannot see
     # sparseness: one long decode tail pins it at seconds)
@@ -68,6 +73,7 @@ class InstanceStat:
     n_queued: int                      # queued micro-requests (movable work)
     draining: bool
     role_bias: float
+    mem_pressure: float = 0.0          # KV page-pool occupancy in [0, 1]
 
 
 # ---------------------------------------------------------------------------
@@ -179,15 +185,22 @@ class PoolController:
         # until retired); the applier un-drains one instead of attaching,
         # so the pool never runs more than max_instances concurrently
         draining_iids = {s.iid for s in stats if s.draining}
+        max_pressure = max((s.mem_pressure for s in active), default=0.0)
+        pressured = max_pressure > cfg.scale_up_pressure
         scaled_up = False
-        if (self._load > cfg.scale_up_drain and has_backlog
+        if (((self._load > cfg.scale_up_drain and has_backlog) or pressured)
                 and n_active < cfg.max_instances
                 and now - self._last_up >= cfg.scale_up_cooldown):
             self._last_up = now
             scaled_up = True
-            actions.append(ScaleUp(f"load {self._load:.2f}s > "
-                                   f"{cfg.scale_up_drain:.2f}s"))
+            why = (f"KV pressure {max_pressure:.0%} > "
+                   f"{cfg.scale_up_pressure:.0%}" if pressured and not
+                   (self._load > cfg.scale_up_drain and has_backlog)
+                   else f"load {self._load:.2f}s > "
+                        f"{cfg.scale_up_drain:.2f}s")
+            actions.append(ScaleUp(why))
         elif ((low_load or (sparse and self._load <= cfg.scale_up_drain))
+                and not pressured
                 and n_active > cfg.min_instances
                 and now - self._last_down >= cfg.scale_down_cooldown):
             # sparse alone may not drain an overloaded pool: a few heavy
@@ -205,8 +218,15 @@ class PoolController:
         # ---- migrate work off draining members (including the one just
         # picked above) so they can retire.  Skipped on a scale-up round:
         # the applier un-drains a draining member first, and evacuating
-        # the instance we just decided to keep would be self-defeating ----
-        cold = min(active, key=lambda s: s.drain_time) if active else None
+        # the instance we just decided to keep would be self-defeating.
+        # Members over the KV-pressure threshold are never migration
+        # targets (their page pool cannot hold the incoming state) ----
+        def _coldness(s: InstanceStat):
+            return (s.mem_pressure > cfg.scale_up_pressure, s.drain_time)
+
+        cold = min(active, key=_coldness) if active else None
+        if cold is not None and cold.mem_pressure > cfg.scale_up_pressure:
+            cold = None               # every live member is pressured
         if not scaled_up:
             for s in stats:
                 if (s.iid in draining_iids and s.n_queued > 0
@@ -218,8 +238,9 @@ class PoolController:
         # ---- rebalance queue-depth imbalance between live members ----
         if n_active >= 2:
             hot = max(active, key=lambda s: s.drain_time)
-            cold = min(active, key=lambda s: s.drain_time)
+            cold = min(active, key=_coldness)
             if (hot.iid != cold.iid and hot.n_queued > 1
+                    and cold.mem_pressure <= cfg.scale_up_pressure
                     and hot.drain_time > cfg.rebalance_ratio * cold.drain_time
                     and hot.drain_time - cold.drain_time > cfg.rebalance_slack):
                 actions.append(MigrateWork(

@@ -15,6 +15,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import BatchCostModel
+from repro.core.paging import pages_for
 
 
 def _bucket(x: int, base: int = 2) -> int:
@@ -68,6 +69,10 @@ class BatchPlan:
     decodes: List[DecodeWork]
     prefills: List[Tuple[PrefillWork, int]]   # (work, granted tokens)
     predicted_latency: float
+    # work was deferred because the KV page pool could not hold its
+    # growth — the session defers (pages free as requests finish) or
+    # preempts a victim's cache instead of letting the engine overflow
+    starved: bool = False
 
     @property
     def prefill_tokens(self) -> int:
@@ -149,8 +154,32 @@ class LocalScheduler:
         return max(0, int(budget * 2.0 ** self.role_bias))
 
     def next_batch(self, prefill_queue: Sequence[PrefillWork],
-                   decode_queue: Sequence[DecodeWork]) -> BatchPlan:
-        decodes = list(decode_queue[: self.max_batch_requests])
+                   decode_queue: Sequence[DecodeWork],
+                   free_pages: Optional[int] = None,
+                   page_size: Optional[int] = None) -> BatchPlan:
+        """Compose one unified batch.
+
+        With ``free_pages``/``page_size`` (a paged-KV backend) the batch
+        is additionally sized against the free page pool: every decode
+        that would cross a page boundary reserves a page, every prefill
+        grant is capped to the pages left.  Work that does not fit is
+        *deferred* (it stays queued; ``plan.starved`` tells the session)
+        rather than overflowing the pool mid-batch.
+        """
+        mem_aware = free_pages is not None and bool(page_size)
+        starved = False
+        decodes: List[DecodeWork] = []
+        budget_pages = free_pages if mem_aware else 0
+        for d in decode_queue[: self.max_batch_requests]:
+            if mem_aware:
+                # appending this stream's next token needs a fresh page
+                # exactly when its context fills the current one
+                need = 1 if d.ctx % page_size == 0 else 0
+                if need > budget_pages:
+                    starved = True
+                    continue
+                budget_pages -= need
+            decodes.append(d)
         d_ctx = int(sum(d.ctx for d in decodes) / max(1, len(decodes)))
         p_ctx = max((w.ctx for w in prefill_queue), default=0)
         M = self.max_prefill_allowed(d_ctx, len(decodes), p_ctx=p_ctx,
@@ -168,14 +197,24 @@ class LocalScheduler:
             if budget <= 0 or len(decodes) + len(grants) >= self.max_batch_requests:
                 break
             g = min(w.remaining, budget)
+            if mem_aware:
+                # slack in the last allocated page + whole free pages
+                slack = pages_for(w.ctx, page_size) * page_size - w.ctx
+                g_mem = slack + budget_pages * page_size
+                if g > g_mem:
+                    g = g_mem
+                    starved = True
             if g <= 0:
                 continue
             # avoid degenerate 1-token prefill slivers unless finishing
             if g < min(self.min_chunk, w.remaining):
                 break
+            if mem_aware:
+                budget_pages -= pages_for(w.ctx + g, page_size) - \
+                    pages_for(w.ctx, page_size)
             grants.append((w, g))
             budget -= g
         plen = sum(g for _, g in grants)
         p_ctx = grants[0][0].ctx if grants else 0
         lat = self.cost.mixed_batch_latency(plen, p_ctx, len(decodes), d_ctx)
-        return BatchPlan(decodes, grants, lat)
+        return BatchPlan(decodes, grants, lat, starved=starved)

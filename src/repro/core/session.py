@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.costmodel import BatchCostModel, WorkItem
 from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
+from repro.core.paging import pages_for
 from repro.core.predictor import ExecutionPredictor, QueuedWork
 from repro.core.request import (
     MicroRequest, Request, RequestState, SLOClass,
@@ -163,10 +164,19 @@ class Backend:
     events); real backends execute synchronously on the wall clock and
     return actual sampled tokens (``emits_tokens``).  ``max_chunk``
     caps per-pass prefill grants (e.g. the engine's padding buckets).
+
+    Backends with a paged KV cache expose the page pool through
+    ``page_size`` / ``free_pages`` / ``total_pages``: the session sizes
+    batches against free pages (memory-aware local scheduling), reads
+    ``1 - free/total`` as the admission / elastic pressure signal, and
+    calls ``on_preempt`` to reclaim a victim's pages under pressure.
+    ``page_size=None`` (the default) means an unbounded dense cache and
+    disables all of it.
     """
     virtual_clock: bool = True
     emits_tokens: bool = False
     max_chunk: Optional[int] = None
+    page_size: Optional[int] = None
     cost: BatchCostModel
 
     def spawn(self, iid: int) -> None:
@@ -202,6 +212,18 @@ class Backend:
                    dst_iid: int) -> bool:
         """Re-home a queued micro's resources.  False => cannot move."""
         return True
+
+    def free_pages(self, iid: int) -> Optional[int]:
+        """Free KV pages on the instance (None = unbounded / dense)."""
+        return None
+
+    def total_pages(self, iid: int) -> Optional[int]:
+        """Page-pool capacity of the instance (None = unbounded)."""
+        return None
+
+    def on_preempt(self, micro: MicroState) -> None:
+        """Drop the micro's resident KV (pages); the session re-queues
+        the work as a recompute prefill."""
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +293,7 @@ class SessionMetrics:
     n_instances_final: int = 0
     migrations: int = 0
     migration_bytes: float = 0.0
+    preemptions: int = 0           # KV evictions under memory pressure
     pool_events: List[Tuple[float, str]] = dataclasses.field(
         default_factory=list)
     # online serving
@@ -402,12 +425,16 @@ class ServeSession:
         self._open_requests = 0
         self._pool_armed = False
         self._truncated = False
+        self._batches_done = 0
+        self._pool_progress = -1
+        self._pool_idle = 0
         self.now = 0.0
         self._t0: Optional[float] = None   # wall-clock epoch (real backends)
         self.transfer_exposed = 0.0
         self.transfer_bytes = 0.0
         self.migrations = 0
         self.migration_bytes = 0.0
+        self.preemptions = 0
         self.n_instances_peak = self.cfg.n_instances
         self.pool_events: List[Tuple[float, str]] = []
         self.sched_overheads: List[float] = []
@@ -456,6 +483,26 @@ class ServeSession:
         elif kind == "pool":
             self.policy.on_pool_check(self, self.now)
             if self._arrivals_left > 0 or self._open_requests > 0:
+                # The recurring pool event keeps the queue non-empty, so
+                # a session that can make no progress (e.g. a request
+                # whose KV footprint no pool member can ever hold) would
+                # spin on pool checks forever.  Give the controller a few
+                # ticks to unblock things (scale up / migrate / its kicks
+                # land as non-pool events), then raise instead.
+                busy = any(i.busy for i in self.instances)
+                others = any(k != "pool" for _, _, k, _ in self._events)
+                if busy or others or self._batches_done != self._pool_progress:
+                    self._pool_idle = 0
+                    self._pool_progress = self._batches_done
+                elif self._arrivals_left == 0:
+                    self._pool_idle += 1
+                    if self._pool_idle >= 5:
+                        raise SessionStallError(
+                            f"pool control loop spinning with "
+                            f"{self._open_requests} open request(s) and no "
+                            f"instance able to progress (work stuck beyond "
+                            f"preemption — footprint exceeds every pool "
+                            f"member?)")
                 self._push(self.now + payload, "pool", payload)
             else:
                 self._pool_armed = False
@@ -697,10 +744,52 @@ class ServeSession:
             best = min(best, n_pass * per_pass)
         return best
 
-    def _admit(self, r: Request) -> bool:
-        if not self.cfg.admission or r.slo is None or r.slo.admits_always:
+    def kv_pressure(self, iid: int) -> float:
+        """Fraction of the instance's KV page pool in use — the memory
+        signal admission control and the elastic controller consume
+        (0.0 for dense/unbounded backends)."""
+        total = self.backend.total_pages(iid)
+        if not total:
+            return 0.0
+        free = self.backend.free_pages(iid)
+        if free is None:
+            return 0.0
+        return 1.0 - free / total
+
+    def _kv_committed_pages(self, inst: InstanceState) -> int:
+        """Pages the instance's placed micro-requests will eventually
+        occupy (each micro grows to its span end).  Computed from the
+        session's own queues, so the number — and every admission
+        decision built on it — is byte-identical on the simulator and
+        on real engines regardless of clock semantics."""
+        psize = self.backend.page_size
+        return sum(pages_for(m.mr.end, psize)
+                   for m in inst.prefill_q + inst.decode_q)
+
+    def _kv_admit(self, r: Request) -> bool:
+        """Page-pool admission: shed the request when no instance can
+        commit enough pages for its predicted footprint (prompt +
+        predicted decode, rounded up to pages)."""
+        psize = self.backend.page_size
+        if not psize:
             return True
-        return self.predicted_ttft(r) <= r.slo.ttft
+        need = pages_for(r.P + r.D_pred, psize)
+        for inst in (self.active_instances() or self.pool_instances()):
+            total = self.backend.total_pages(inst.iid)
+            if total is None or \
+                    total - self._kv_committed_pages(inst) >= need:
+                return True
+        return False
+
+    def _admit(self, r: Request) -> Optional[str]:
+        """None to admit, else the shed reason."""
+        if not self.cfg.admission or r.slo is None or r.slo.admits_always:
+            return None
+        if self.predicted_ttft(r) > r.slo.ttft:
+            return "predicted TTFT over SLO"
+        if not self._kv_admit(r):
+            return "KV page commitments exhausted"
+        return None
 
     def _reject(self, r: Request, reason: str,
                 arrival: Optional[float] = None) -> None:
@@ -709,6 +798,7 @@ class ServeSession:
             r.rid, ReqState(r, arrival=r.arrival if arrival is None
                             else arrival))
         st.rejected = True
+        self.pool_events.append((self.now, f"reject {r.rid}: {reason}"))
         self._finalize(st)
 
     # ---------------- arrival ----------------
@@ -727,8 +817,9 @@ class ServeSession:
         if r.slo is None and self.cfg.default_slo is not None:
             r.slo = self.cfg.default_slo
         self.backend.register(r)
-        if not self._admit(r):
-            self._reject(r, "predicted TTFT over SLO", arrival=arrival)
+        shed_reason = self._admit(r)
+        if shed_reason is not None:
+            self._reject(r, shed_reason, arrival=arrival)
             return
         r.to(RequestState.ADMITTED, self.now)
         placements = self.policy.place(r, self, self.now)
@@ -779,9 +870,7 @@ class ServeSession:
             deadline = arrival + slo.ttft
         return tbt, deadline
 
-    def _maybe_start_batch(self, inst: InstanceState) -> None:
-        if inst.busy or inst.retired or not inst.has_work(self.now):
-            return
+    def _compose_batch(self, inst: InstanceState):
         pf = [m for m in inst.prefill_q if m.ready <= self.now]
         dc = [m for m in inst.decode_q if m.ready <= self.now]
         if inst.role == "prefill":
@@ -798,7 +887,73 @@ class ServeSession:
         for m in dc:
             tbt, _ = self._work_meta(m)
             dworks.append(DecodeWork(m.rid, m.pos, tbt=tbt))
-        plan = inst.scheduler.next_batch(pworks, dworks)
+        plan = inst.scheduler.next_batch(
+            pworks, dworks, free_pages=self.backend.free_pages(inst.iid),
+            page_size=self.backend.page_size)
+        return plan, pf, dc
+
+    def _seniority(self, m: MicroState):
+        st = self.req_states.get(m.mr.parent.rid)
+        arrival = st.arrival if st is not None else m.mr.parent.arrival
+        return (arrival, m.mr.parent.rid)
+
+    def _preempt_for_memory(self, inst: InstanceState,
+                            junior_to=None) -> bool:
+        """Free pages by evicting one micro-request's KV (vLLM-style
+        recompute preemption): the *youngest* resident request loses its
+        cache and re-queues as prefill from position 0.  Preemption only
+        fires in favour of strictly older work — the oldest request is
+        never evicted, so it monotonically progresses and the preemption
+        loop terminates (no two requests can seesaw).  ``junior_to``
+        restricts victims to requests younger than the given seniority
+        (the handoff path protects the arriving beta's elders)."""
+        if inst.role == "decode":
+            # a decode-only instance (disaggregation baseline) can never
+            # run the victim's recompute prefill — eviction would strand it
+            return False
+        candidates = [m for q in (inst.decode_q, inst.prefill_q) for m in q
+                      if m not in inst.in_flight and not m.cancelled
+                      and m.ready != float("inf") and m.pos > 0]
+        if junior_to is not None:
+            candidates = [m for m in candidates
+                          if self._seniority(m) > junior_to]
+        if not candidates:
+            return False
+        victim = max(candidates, key=self._seniority)
+        if junior_to is None:
+            older = [m for m in inst.prefill_q + inst.decode_q
+                     if m is not victim and not m.cancelled
+                     and self._seniority(m) < self._seniority(victim)]
+            if not older:
+                return False
+        self.backend.on_preempt(victim)
+        self._requeue_for_recompute(inst, victim)
+        self.preemptions += 1
+        self.pool_events.append((self.now, f"preempt {victim.rid}"))
+        return True
+
+    @staticmethod
+    def _requeue_for_recompute(inst: InstanceState, m: MicroState) -> None:
+        """Turn a micro's resident prefix into prefill work again: it
+        rebuilds KV from position 0 under the normal page budget."""
+        if m in inst.decode_q:
+            inst.decode_q.remove(m)
+            inst.prefill_q.append(m)
+        m.prefill_remaining += m.pos             # recompute [0, pos)
+        m.pos = 0
+
+    def _maybe_start_batch(self, inst: InstanceState) -> None:
+        if inst.busy or inst.retired or not inst.has_work(self.now):
+            return
+        plan, pf, dc = self._compose_batch(inst)
+        # memory-starved with runnable work: preempt (possibly several
+        # victims — deep overcommit needs more than one) and retry;
+        # otherwise defer — pages free as other requests finish
+        guard = len(inst.prefill_q) + len(inst.decode_q)
+        while (not plan.decodes and not plan.prefills and plan.starved
+               and guard > 0 and self._preempt_for_memory(inst)):
+            guard -= 1
+            plan, pf, dc = self._compose_batch(inst)
         if not plan.decodes and not plan.prefills:
             return
         # map back to MicroState
@@ -828,6 +983,7 @@ class ServeSession:
     def _on_batch_done(self, payload) -> None:
         iid, grants, decs, plan, res = payload
         inst = self.instances[iid]
+        self._batches_done += 1
         inst.busy = False
         inst.in_flight = set()
         inst.scheduler.record(plan, res.latency)
@@ -925,6 +1081,32 @@ class ServeSession:
             # alpha's final pass): nothing to hand off or run
             return
         beta.mr.parent.to(RequestState.HANDOFF, self.now)
+        # ---- page-budget the transfer ----
+        # Importing the prefix makes ceil(pos/page) pages resident at
+        # once; an unbudgeted import would overflow the destination pool
+        # (the engine's allocator raises OutOfPages).  Evict younger
+        # residents to make room; when even that is not enough, fall
+        # back to *recompute*: the beta rebuilds its prefix from
+        # position 0 under the scheduler's normal page budget and no
+        # state ships at all.
+        psize = self.backend.page_size
+        if psize and beta.pos > 0:
+            inst = self.instances[beta.iid]
+            need = pages_for(beta.pos, psize)
+            guard = self._seniority(beta)
+            free = self.backend.free_pages(beta.iid)
+            while (free is not None and free < need
+                   and self._preempt_for_memory(inst, junior_to=guard)):
+                free = self.backend.free_pages(beta.iid)
+            if free is not None and free < need and inst.role != "decode":
+                # (a decode-only instance cannot recompute a prefix; its
+                # import proceeds and may raise the typed OutOfPages)
+                self._requeue_for_recompute(inst, beta)
+                beta.ready = self.now
+                self.pool_events.append(
+                    (self.now, f"handoff-recompute {beta.rid}"))
+                self._push(self.now, "kick", beta.iid)
+                return
         if src is not None and not self.backend.virtual_clock:
             t0 = _time.monotonic()
             nbytes = self.backend.do_handoff(src, beta)
@@ -1025,6 +1207,7 @@ class ServeSession:
             n_instances_final=len(self.active_instances()),
             migrations=self.migrations,
             migration_bytes=self.migration_bytes,
+            preemptions=self.preemptions,
             pool_events=list(self.pool_events),
             rejected=n_rej,
             cancelled=n_can,

@@ -22,9 +22,13 @@ import numpy as np
 from repro.core.costmodel import A100, BatchCostModel, HardwareSpec
 from repro.core.request import Request
 from repro.core.session import Backend, ExecResult, InstanceState, MicroState
-from repro.engine.runner import BUCKETS, BatchItem, InstanceEngine
+from repro.engine.block_allocator import pages_for
+from repro.engine.runner import (
+    DEFAULT_MAX_CHUNK, BatchItem, InstanceEngine,
+)
 from repro.engine.sampling import sample
 from repro.models.config import ModelConfig
+from repro.models.model import supports_paged_kv
 
 
 @dataclasses.dataclass
@@ -34,20 +38,45 @@ class _ReqRecord:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
 
+    @property
+    def full_seq(self) -> np.ndarray:
+        """Prompt + generated tokens — the source for prefill grants,
+        including KV-recompute of preempted requests (whose 'prefill'
+        extends past the prompt into already-generated positions)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    @property
+    def sampled_upto(self) -> int:
+        """First position whose token has NOT been sampled yet."""
+        return len(self.prompt) + len(self.generated)
+
 
 class EngineBackend(Backend):
     virtual_clock = False
     emits_tokens = True
-    max_chunk = BUCKETS[-1]        # engine padding-bucket ceiling
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
                  max_len: int = 512, hw: HardwareSpec = A100,
-                 transfer_chunk: int = 32, seed: int = 0):
+                 transfer_chunk: int = 32, seed: int = 0,
+                 kv_mode: str = "auto", page_size: int = 8,
+                 n_pages: Optional[int] = None,
+                 max_chunk: int = DEFAULT_MAX_CHUNK):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.transfer_chunk = transfer_chunk
+        self.max_chunk = max_chunk       # engine padding-bucket ceiling
+        self.kv_mode = kv_mode
+        self.paged = (kv_mode == "paged" or
+                      (kv_mode == "auto" and supports_paged_kv(cfg)))
+        self.page_size = page_size if self.paged else None
+        self.n_pages = (n_pages if n_pages is not None
+                        else n_slots * pages_for(max_len, page_size)) \
+            if self.paged else None
         self.cost = BatchCostModel(cfg, hw)
         self.engines: Dict[int, InstanceEngine] = {}
         self.records: Dict[str, _ReqRecord] = {}
@@ -58,11 +87,28 @@ class EngineBackend(Backend):
     # ---------------- pool lifecycle ----------------
     def spawn(self, iid: int) -> None:
         if iid not in self.engines:
-            self.engines[iid] = InstanceEngine(self.cfg, self.params,
-                                               self.n_slots, self.max_len)
+            eng = InstanceEngine(
+                self.cfg, self.params, self.n_slots, self.max_len,
+                kv_mode=self.kv_mode,
+                page_size=self.page_size or 8, n_pages=self.n_pages,
+                max_chunk=self.max_chunk)
+            # the engine owns the auto-mode rule; the backend's page
+            # bookkeeping (register/admission/total_pages) must agree
+            assert eng.paged == self.paged, \
+                (f"kv_mode resolution diverged: backend={self.paged}, "
+                 f"engine={eng.paged}")
+            self.engines[iid] = eng
 
     def retire(self, iid: int) -> None:
         self.engines.pop(iid, None)
+
+    # ---------------- KV occupancy (memory-pressure surface) ----------
+    def free_pages(self, iid: int) -> Optional[int]:
+        eng = self.engines.get(iid)
+        return eng.free_pages if eng is not None else None
+
+    def total_pages(self, iid: int) -> Optional[int]:
+        return self.n_pages
 
     # ---------------- request plumbing ----------------
     def register(self, req: Request, prompt=None) -> None:
@@ -72,9 +118,19 @@ class EngineBackend(Backend):
             # trace replay supplies lengths only: synthesize the prompt
             prompt = self._rng.integers(0, self.cfg.vocab_size, req.P)
         prompt = np.asarray(prompt, np.int32)
-        if len(prompt) + req.decode_len > self.max_len:
+        total = len(prompt) + req.decode_len
+        if self.paged:
+            # paged engines bound sequences by the page pool, not a
+            # per-slot max_len — a request may grow past max_len by
+            # appending pages, it just cannot exceed the whole pool
+            if pages_for(total, self.page_size) > self.n_pages:
+                raise ValueError(
+                    f"request {req.rid}: P+D = {total} needs "
+                    f"{pages_for(total, self.page_size)} pages, pool has "
+                    f"{self.n_pages}")
+        elif total > self.max_len:
             raise ValueError(
-                f"request {req.rid}: P+D = {len(prompt) + req.decode_len} "
+                f"request {req.rid}: P+D = {total} "
                 f"exceeds engine max_len {self.max_len}")
         self.records[req.rid] = _ReqRecord(prompt, req.decode_len)
 
@@ -95,6 +151,15 @@ class EngineBackend(Backend):
             if eng is not None:
                 eng.free(loc[1])
 
+    def on_preempt(self, micro: MicroState) -> None:
+        """Memory-pressure preemption: drop the micro's KV pages (the
+        slot stays reserved); the session re-queues it for recompute."""
+        loc = self._slots.get(micro.rid)
+        if loc is not None:
+            eng = self.engines.get(loc[0])
+            if eng is not None:
+                eng.preempt(loc[1])
+
     # ---------------- execution ----------------
     def execute(self, inst: InstanceState,
                 grants: Sequence[Tuple[MicroState, int]],
@@ -105,10 +170,14 @@ class EngineBackend(Backend):
         for m, g in grants:
             rec = self.records[m.mr.parent.rid]
             slot = self._slots[m.rid][1]
-            toks = rec.prompt[m.pos:m.pos + g]
-            # the pass consuming the last prompt token emits the first
-            # output token
-            want = (m.pos + g) >= m.mr.parent.P
+            # source is prompt + generated: KV recompute of a preempted
+            # request "prefills" through already-generated positions
+            toks = rec.full_seq[m.pos:m.pos + g]
+            # the pass consuming the last *unsampled* position emits the
+            # next token (for a fresh prefill that is the last prompt
+            # token -> first output token; recompute passes re-sample
+            # nothing)
+            want = (m.pos + g) >= rec.sampled_upto
             items.append(BatchItem(slot, toks, m.pos, want_logits=want))
             if want:
                 sampled.append((m, slot))
@@ -131,21 +200,31 @@ class EngineBackend(Backend):
         return ExecResult(latency=latency, tokens=tokens, deferred=False)
 
     # ---------------- KV/state movement ----------------
+    def _transfer_bytes(self, eng: InstanceEngine, upto: int) -> int:
+        """Bytes a handoff of ``upto`` tokens actually puts on the wire:
+        paged engines ship whole pages (state_bytes counts the padding),
+        dense engines move exactly the analytic amount."""
+        if eng.paged:
+            return int(eng.state_bytes(upto))
+        return int(self.cost.kv_transfer_bytes(upto))
+
     def do_handoff(self, src: MicroState, dst: MicroState) -> float:
         """Chunk-wise KV/state handoff from the finished alpha to its
         beta (paper §4.3), on actual cache arrays."""
         si, ss = self._slots[src.rid]
         di, ds = self._slots[dst.rid]
-        pieces = self.engines[si].export_state(ss, upto=src.pos,
-                                               chunk=self.transfer_chunk)
+        src_eng = self.engines[si]
+        pieces = src_eng.export_state(ss, upto=src.pos,
+                                      chunk=self.transfer_chunk)
         self.engines[di].import_state(ds, pieces)
         dst.pos = src.pos
-        nbytes = int(self.cost.kv_transfer_bytes(src.pos))
+        nbytes = self._transfer_bytes(src_eng, src.pos)
         self.kv_bytes_moved += nbytes
         return float(nbytes)
 
     def on_migrate(self, micro: MicroState, src_iid: int,
                    dst_iid: int) -> bool:
+        from repro.engine.block_allocator import OutOfPages
         dst = self.engines.get(dst_iid)
         if dst is None or dst.n_free == 0:
             return False
@@ -154,8 +233,15 @@ class EngineBackend(Backend):
         if micro.pos > 0 and micro.ready != float("inf"):
             pieces = self.engines[old_iid].export_state(
                 old_slot, upto=micro.pos, chunk=self.transfer_chunk)
-            dst.import_state(new_slot, pieces)
-            self.kv_bytes_moved += int(self.cost.kv_transfer_bytes(micro.pos))
+            try:
+                dst.import_state(new_slot, pieces)
+            except OutOfPages:
+                # destination pool cannot hold the resident KV: decline
+                # the migration instead of crashing the session
+                dst.free(new_slot)
+                return False
+            self.kv_bytes_moved += self._transfer_bytes(
+                self.engines[old_iid], micro.pos)
         self.engines[old_iid].free(old_slot)
         self._slots[micro.rid] = (dst_iid, new_slot)
         return True

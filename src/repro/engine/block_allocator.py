@@ -1,0 +1,129 @@
+"""Block-table page allocator for the paged KV subsystem.
+
+One ``BlockAllocator`` manages the physical page pool of one
+``InstanceEngine``: every serving slot owns an append-only *block
+table* — the ordered list of physical page ids whose concatenation is
+the slot's logical KV sequence (position ``t`` lives at offset
+``t % page_size`` of physical page ``table[t // page_size]``).
+
+Pages are the unit of everything downstream:
+
+  * the Pallas paged-decode kernel streams pages chosen from the block
+    table (``repro.kernels.paged_decode_attention``);
+  * micro-request KV handoff ships whole pages so chunk boundaries and
+    page boundaries coincide (``InstanceEngine.export_state``);
+  * the schedulers budget batches in free pages and the elastic
+    controller reads ``1 - free/total`` as the memory-pressure signal.
+
+Running out of resources raises *typed* errors so the serving session's
+load-shedding path can catch them precisely instead of eating a raw
+``IndexError`` from a ``list.pop``:
+
+  * ``CapacityError`` — any engine capacity exhaustion (also raised by
+    ``InstanceEngine.alloc`` when the slot pool is empty);
+  * ``OutOfPages`` — the page pool specifically cannot cover a
+    requested sequence extension.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.paging import pages_for  # noqa: F401  (re-exported)
+
+
+class CapacityError(RuntimeError):
+    """An engine resource pool (slots or KV pages) is exhausted."""
+
+
+class OutOfPages(CapacityError):
+    """The page pool cannot grow a slot to the requested length."""
+
+
+class BlockAllocator:
+    """Free-list page allocator + per-slot block tables."""
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError(f"need positive pool: {n_pages=} {page_size=}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_pages))
+        self._tables: List[List[int]] = [[] for _ in range(n_slots)]
+        self._lens: List[int] = [0] * n_slots
+
+    # ---------------- introspection ----------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def pressure(self) -> float:
+        """Fraction of the pool in use — the signal the elastic
+        controller and admission control consume."""
+        return self.used_pages / self.n_pages
+
+    @property
+    def max_table_len(self) -> int:
+        """Longest block table across slots (sizes the kernel grid)."""
+        return max((len(t) for t in self._tables), default=0)
+
+    def pages_of(self, slot: int) -> List[int]:
+        return list(self._tables[slot])
+
+    def len_of(self, slot: int) -> int:
+        """Logical tokens the slot's pages currently cover."""
+        return self._lens[slot]
+
+    def can_fit(self, slot: int, new_len: int) -> bool:
+        need = pages_for(new_len, self.page_size) - len(self._tables[slot])
+        return need <= len(self._free)
+
+    # ---------------- mutation ----------------
+    def ensure(self, slot: int, new_len: int) -> None:
+        """Grow the slot's block table to cover ``new_len`` tokens,
+        appending pages from the free list.  Raises ``OutOfPages`` and
+        allocates nothing when the pool cannot cover the extension."""
+        table = self._tables[slot]
+        need = pages_for(new_len, self.page_size) - len(table)
+        if need > len(self._free):
+            raise OutOfPages(
+                f"slot {slot}: need {need} page(s) to reach len {new_len}, "
+                f"only {len(self._free)} of {self.n_pages} free")
+        for _ in range(max(0, need)):
+            table.append(self._free.pop())
+        self._lens[slot] = max(self._lens[slot], new_len)
+
+    def trim(self, slot: int) -> int:
+        """Free every page of the slot but keep the slot itself
+        (preemption: the KV is recomputed later).  Returns pages freed."""
+        table = self._tables[slot]
+        freed = len(table)
+        self._free.extend(table)
+        self._tables[slot] = []
+        self._lens[slot] = 0
+        return freed
+
+    def free_slot(self, slot: int) -> int:
+        """Release the slot's pages when its request leaves the engine."""
+        return self.trim(slot)
+
+    def table_array(self, width: int) -> np.ndarray:
+        """Dense ``(n_slots, width)`` int32 block-table matrix for the
+        kernels.  Unallocated entries hold 0 — safe because every read
+        past a slot's length is masked (causally in the prefill kernel,
+        by ``lengths`` in the decode kernel)."""
+        out = np.zeros((self.n_slots, width), np.int32)
+        for s, table in enumerate(self._tables):
+            if len(table) > width:
+                raise OutOfPages(
+                    f"slot {s} holds {len(table)} pages > table width {width}")
+            if table:
+                out[s, : len(table)] = table
+        return out

@@ -14,23 +14,46 @@ tests exercise the same code path the TPU deployment lowers; the cluster
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.block_allocator import (
+    BlockAllocator, CapacityError, OutOfPages, pages_for,
+)
 from repro.models.config import ModelConfig
-from repro.models.model import forward, init_cache
+from repro.models.model import (
+    forward, init_cache, init_paged_cache, supports_paged_kv,
+)
 
-BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+DEFAULT_MAX_CHUNK = 512
 
 
-def bucket_of(n: int) -> int:
-    for b in BUCKETS:
+def bucket_ladder(max_chunk: int) -> Tuple[int, ...]:
+    """Power-of-two padding buckets up to (at least) ``max_chunk`` — the
+    ladder is derived from the engine's configured max chunk instead of
+    a hardcoded tuple, so engines serving longer chunks just get more
+    rungs."""
+    out, b = [], 1
+    while b < max_chunk:
+        out.append(b)
+        b <<= 1
+    out.append(b)
+    return tuple(out)
+
+
+BUCKETS = bucket_ladder(DEFAULT_MAX_CHUNK)   # default ladder (compat)
+
+
+def bucket_of(n: int, buckets: Sequence[int] = BUCKETS) -> int:
+    for b in buckets:
         if n <= b:
             return b
-    raise ValueError(f"chunk of {n} tokens exceeds max bucket {BUCKETS[-1]}")
+    raise ValueError(
+        f"chunk of {n} tokens exceeds max bucket {buckets[-1]}; "
+        f"construct the engine with max_chunk >= {n}")
 
 
 @dataclasses.dataclass
@@ -42,51 +65,121 @@ class BatchItem:
 
 
 class InstanceEngine:
+    """One unified instance.
+
+    ``kv_mode`` selects the cache substrate:
+
+    * ``"paged"`` — block-table page pool (``init_paged_cache`` +
+      ``BlockAllocator``); attention runs through the Pallas paged-decode
+      / chunked-prefill kernels (interpret mode on CPU).  Requests grow
+      by appending pages, so a sequence is bounded by the *pool*, not a
+      per-slot ``max_len``.
+    * ``"dense"`` — the legacy (n_slots, max_len) slot cache; required
+      for ring-buffer / recurrent / enc-dec architectures.
+    * ``"auto"`` (default) — paged when the architecture supports it.
+    """
+
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
-                 max_len: int = 512, window_override: Optional[int] = None):
+                 max_len: int = 512, window_override: Optional[int] = None,
+                 kv_mode: str = "auto", page_size: int = 8,
+                 n_pages: Optional[int] = None,
+                 max_chunk: int = DEFAULT_MAX_CHUNK):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.window_override = window_override
-        self.cache = init_cache(cfg, n_slots, max_len,
-                                window_override=window_override)
+        self.max_chunk = max_chunk
+        self.buckets = bucket_ladder(max_chunk)
+        if kv_mode not in ("auto", "paged", "dense"):
+            raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if kv_mode == "paged" and not supports_paged_kv(cfg):
+            raise ValueError(f"{cfg.name} cannot run a paged KV cache")
+        if kv_mode == "paged" and window_override is not None:
+            raise ValueError("paged KV has no sliding-window support; "
+                             "window_override requires kv_mode='dense'")
+        self.paged = (kv_mode == "paged" or
+                      (kv_mode == "auto" and supports_paged_kv(cfg)
+                       and window_override is None))
+        if self.paged:
+            self.page_size = page_size
+            self.n_pages = (n_pages if n_pages is not None
+                            else n_slots * pages_for(max_len, page_size))
+            self.cache = init_paged_cache(cfg, self.n_pages, page_size)
+            self.allocator = BlockAllocator(self.n_pages, page_size, n_slots)
+            self.page_buckets = bucket_ladder(self.n_pages)
+        else:
+            self.page_size = None
+            self.n_pages = None
+            self.allocator = None
+            self.cache = init_cache(cfg, n_slots, max_len,
+                                    window_override=window_override)
         self.free_slots = list(range(n_slots))
         self.slot_owner: Dict[int, str] = {}
-        self._step_fns: Dict[int, callable] = {}
+        self._step_fns: Dict[tuple, callable] = {}
         # counters for tests/benchmarks
         self.iterations = 0
         self.tokens_processed = 0
 
     # ---------------- slot management ----------------
     def alloc(self, req_id: str) -> int:
+        if not self.free_slots:
+            raise CapacityError(
+                f"no free KV slot for {req_id}: all {self.n_slots} in use")
         slot = self.free_slots.pop(0)
         self.slot_owner[slot] = req_id
         return slot
 
     def free(self, slot: int) -> None:
         self.slot_owner.pop(slot, None)
+        if self.allocator is not None:
+            self.allocator.free_slot(slot)
         self.free_slots.append(slot)
+
+    def preempt(self, slot: int) -> None:
+        """Release the slot's KV pages but keep the slot: the scheduler
+        re-queues the request for recompute under memory pressure."""
+        if self.allocator is not None:
+            self.allocator.trim(slot)
 
     @property
     def n_free(self) -> int:
         return len(self.free_slots)
 
+    @property
+    def free_pages(self) -> Optional[int]:
+        return self.allocator.free_pages if self.allocator else None
+
+    @property
+    def mem_pressure(self) -> float:
+        return self.allocator.pressure if self.allocator else 0.0
+
     # ---------------- jitted unified step ----------------
-    def _step_fn(self, T: int):
-        if T in self._step_fns:
-            return self._step_fns[T]
-        cfg, wo = self.cfg, self.window_override
+    def _step_fn(self, T: int, n_pp: int = 0):
+        key = (T, n_pp)
+        if key in self._step_fns:
+            return self._step_fns[key]
+        cfg, wo, page = self.cfg, self.window_override, self.page_size
 
-        @jax.jit
-        def step(params, cache, tokens, pos_offset, n_valid, active):
-            logits, new_cache, _ = forward(
-                params, cfg, tokens, cache=cache, pos_offset=pos_offset,
-                active=active, n_valid=n_valid, last_only=True,
-                window_override=wo)
-            return logits[:, 0], new_cache
+        if n_pp:
+            @jax.jit
+            def step(params, cache, tokens, pos_offset, n_valid, active,
+                     tables):
+                logits, new_cache, _ = forward(
+                    params, cfg, tokens, cache=cache, pos_offset=pos_offset,
+                    active=active, n_valid=n_valid, last_only=True,
+                    block_tables=tables, page_size=page)
+                return logits[:, 0], new_cache
+        else:
+            @jax.jit
+            def step(params, cache, tokens, pos_offset, n_valid, active):
+                logits, new_cache, _ = forward(
+                    params, cfg, tokens, cache=cache, pos_offset=pos_offset,
+                    active=active, n_valid=n_valid, last_only=True,
+                    window_override=wo)
+                return logits[:, 0], new_cache
 
-        self._step_fns[T] = step
+        self._step_fns[key] = step
         return step
 
     # ---------------- execution ----------------
@@ -95,7 +188,7 @@ class InstanceEngine:
         for items with want_logits."""
         if not items:
             return {}
-        T = bucket_of(max(len(it.tokens) for it in items))
+        T = bucket_of(max(len(it.tokens) for it in items), self.buckets)
         B = self.n_slots
         tokens = np.zeros((B, T), np.int32)
         pos_off = np.zeros((B,), np.int32)
@@ -107,10 +200,22 @@ class InstanceEngine:
             pos_off[it.slot] = it.pos_offset
             n_valid[it.slot] = t
             active[it.slot] = True
-        step = self._step_fn(T)
+        args = ()
+        n_pp = 0
+        if self.paged:
+            # grow block tables to cover every item's span before the
+            # write; OutOfPages here means the scheduler overcommitted
+            for it in items:
+                self.allocator.ensure(it.slot,
+                                      it.pos_offset + len(it.tokens))
+            n_pp = bucket_of(max(1, self.allocator.max_table_len),
+                             self.page_buckets)
+            args = (jnp.asarray(self.allocator.table_array(n_pp)),)
+        step = self._step_fn(T, n_pp)
         logits, self.cache = step(self.params, self.cache,
                                   jnp.asarray(tokens), jnp.asarray(pos_off),
-                                  jnp.asarray(n_valid), jnp.asarray(active))
+                                  jnp.asarray(n_valid), jnp.asarray(active),
+                                  *args)
         self.iterations += 1
         self.tokens_processed += int(sum(len(it.tokens) for it in items))
         logits = np.asarray(logits)
@@ -122,6 +227,10 @@ class InstanceEngine:
         frame embeddings (plus any leading text tokens) into the cache for
         one slot.  Runs as a dedicated call because embeddings enter below
         the token embedding layer."""
+        if self.paged:
+            raise ValueError("stub-frontend prefill requires a dense "
+                             "cache (paged engines serve text-only "
+                             "architectures)")
         B = self.n_slots
         cfg = self.cfg
         n_extra = (extra_embeds.shape[0] if extra_embeds is not None else 0)
@@ -160,8 +269,11 @@ class InstanceEngine:
 
         Attention KV for positions [0, upto) is split into ``chunk``-sized
         pieces (chunk-based KV transfer, §4.3); recurrent state is O(1) and
-        ships as a single piece.
+        ships as a single piece.  Paged engines ship whole pages, so the
+        chunk boundaries of the transfer align with page boundaries.
         """
+        if self.paged:
+            return self._export_paged(slot, upto, chunk)
         cfg = self.cfg
         pieces: List[dict] = []
         spans = ([(0, upto)] if not chunk else
@@ -208,7 +320,84 @@ class InstanceEngine:
                               for k, v in self.cache["cross"].items()}
         return pieces
 
+    def _export_paged(self, slot: int, upto: int, chunk: int = 0) -> List[dict]:
+        """Page-granular export: whole physical pages, grouped into
+        pieces of ``ceil(chunk / page_size)`` pages each (the transfer
+        chunk is rounded *up* to page boundaries)."""
+        page = self.page_size
+        table = self.allocator.pages_of(slot)
+        n_need = pages_for(upto, page)
+        if n_need > len(table):
+            raise OutOfPages(
+                f"slot {slot}: export of {upto} tokens needs {n_need} "
+                f"pages, table holds {len(table)}")
+        per_piece = pages_for(chunk, page) if chunk else max(1, n_need)
+        pieces: List[dict] = []
+        for p0 in range(0, max(1, n_need), per_piece):
+            p1 = min(p0 + per_piece, n_need)
+            ids = np.asarray(table[p0:p1], np.int32)
+            piece = {"span": (p0 * page, min(p1 * page, upto)),
+                     "page_size": page, "pages": []}
+            for i in range(len(self.cfg.layer_pattern)):
+                c = self.cache["blocks"][i]
+                piece["pages"].append({
+                    "k": np.asarray(c["k_pages"][:, ids]),
+                    "v": np.asarray(c["v_pages"][:, ids]),
+                })
+            pieces.append(piece)
+            if p1 >= n_need:
+                break
+        return pieces
+
+    def _import_paged(self, slot: int, pieces: Sequence[dict]) -> None:
+        """Allocate destination pages for every piece, then write each
+        layer's pool with ONE scatter over the concatenated page ids —
+        per-piece writes would copy the whole pool once per piece."""
+        page = self.page_size
+        all_ids: List[np.ndarray] = []
+        per_layer: List[List[np.ndarray]] = \
+            [[] for _ in self.cfg.layer_pattern]
+        per_layer_v: List[List[np.ndarray]] = \
+            [[] for _ in self.cfg.layer_pattern]
+        for piece in pieces:
+            if piece.get("page_size") != page:
+                raise ValueError(
+                    f"page_size mismatch: piece ships "
+                    f"{piece.get('page_size')}-token pages, engine uses "
+                    f"{page}")
+            lo, hi = piece["span"]
+            if hi <= lo:
+                continue
+            self.allocator.ensure(slot, hi)
+            table = self.allocator.pages_of(slot)
+            all_ids.append(np.asarray(
+                table[lo // page: pages_for(hi, page)], np.int32))
+            for i, pc in enumerate(piece["pages"]):
+                per_layer[i].append(pc["k"])
+                per_layer_v[i].append(pc["v"])
+        if not all_ids:
+            return
+        ids = np.concatenate(all_ids)
+        blocks = list(self.cache["blocks"])
+        for i in range(len(blocks)):
+            blocks[i] = {
+                "k_pages": blocks[i]["k_pages"].at[:, ids].set(
+                    jnp.asarray(np.concatenate(per_layer[i], axis=1))),
+                "v_pages": blocks[i]["v_pages"].at[:, ids].set(
+                    jnp.asarray(np.concatenate(per_layer_v[i], axis=1))),
+            }
+        self.cache = dict(self.cache, blocks=tuple(blocks))
+
     def import_state(self, slot: int, pieces: Sequence[dict]) -> None:
+        if self.paged:
+            if any("blocks" in p for p in pieces):
+                raise ValueError("dense-cache pieces cannot be imported "
+                                 "into a paged engine")
+            self._import_paged(slot, pieces)
+            return
+        if any("pages" in p for p in pieces):
+            raise ValueError("paged pieces cannot be imported into a "
+                             "dense engine")
         cache = self.cache
         for piece in pieces:
             lo, hi = piece["span"]
@@ -257,13 +446,17 @@ class InstanceEngine:
         self.cache = cache
 
     def state_bytes(self, upto: int) -> int:
-        """Bytes a handoff of ``upto`` tokens moves (for transfer modeling)."""
+        """Bytes a handoff of ``upto`` tokens moves (for transfer modeling).
+        Paged engines ship whole pages, so the attention term is rounded
+        up to the page size (the padding is real wire traffic)."""
         cfg = self.cfg
         total = 0
         per_tok = 2 * cfg.n_kv_heads * cfg.hd * jnp.dtype(cfg.dtype).itemsize
+        upto_attn = (pages_for(upto, self.page_size) * self.page_size
+                     if self.paged else upto)
         for kind in (list(cfg.layer_pattern) * cfg.n_groups)[: cfg.n_layers]:
             if kind == "attn":
-                total += upto * per_tok
+                total += upto_attn * per_tok
             elif kind == "local_attn":
                 total += min(upto, cfg.window or upto) * per_tok
             elif kind == "ssd":

@@ -58,6 +58,33 @@ def paged_decode_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
                                   interpret=interpret)
 
 
+def gather_pages(pages, block_tables):
+    """Materialize a block-table-indexed page pool as dense per-sequence
+    KV: (n_pages, page, KV, hd) + (B, n_pp) -> (B, n_pp*page, KV, hd).
+
+    Logical position ``t`` of sequence ``b`` lands at index ``t`` of the
+    result, so the dense causal kernels apply unchanged.  Entries past a
+    sequence's allocated table repeat page 0; callers mask them (the
+    chunked-prefill kernel's causal frontier never reaches them)."""
+    B, n_pp = block_tables.shape
+    _, page, KV, hd = pages.shape
+    return pages[block_tables].reshape(B, n_pp * page, KV, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, offsets, *,
+                               bq: int = 128, bk: int = 128,
+                               interpret: bool | None = None):
+    """Chunked prefill over a paged KV pool: gathers the slots' pages to
+    dense prefix KV and runs the chunked-prefill kernel.  ``q`` is the
+    chunk's queries at global positions ``offsets[b] + i``; the chunk's
+    own K/V must already be written into the pages."""
+    k = gather_pages(k_pages, block_tables.astype(jnp.int32))
+    v = gather_pages(v_pages, block_tables.astype(jnp.int32))
+    return chunked_prefill_attention_op(q, k, v, offsets, bq=bq, bk=bk,
+                                        interpret=interpret)
+
+
 # re-export oracles for tests
 chunked_prefill_attention_ref = ref.chunked_prefill_attention_ref
 paged_decode_attention_ref = ref.paged_decode_attention_ref

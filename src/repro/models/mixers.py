@@ -268,24 +268,94 @@ def _flash_decode_seqsharded(cfg: ModelConfig, q, k, v, qpos, kpos,
     return sm(q, k, v, qpos, kpos, ek, ev, epos)
 
 
+def _paged_attention_fwd(p, q, k, v, cfg: ModelConfig, cache, batch_pos,
+                         block_tables, page_size: int,
+                         active, token_mask):
+    """Attention over a paged KV pool (the DynaServe serving hot path).
+
+    The chunk's K/V is scatter-written into physical pages chosen from
+    the per-slot block table, then attention dispatches to the Pallas
+    kernels: single-token batches (decode) stream pages straight from
+    the pool via ``paged_decode_attention``; longer chunks (prefill /
+    mixed) gather the slots' pages to a dense prefix and run
+    ``chunked_prefill_attention``.  On CPU both kernels execute in
+    interpret mode, so the identical code path runs in tests and on TPU.
+    Returns (y_pre_wo, new_cache).
+    """
+    from repro.kernels.ops import (
+        gather_pages, chunked_prefill_attention_op, paged_decode_attention_op,
+    )
+    B, T = batch_pos.shape
+    n_pages = cache["k_pages"].shape[0]
+    logical = batch_pos // page_size                       # (B, T)
+    within = batch_pos % page_size
+    n_pp = block_tables.shape[1]
+    phys = jnp.take_along_axis(block_tables,
+                               jnp.clip(logical, 0, n_pp - 1), axis=1)
+    wmask = None
+    if active is not None:
+        wmask = jnp.broadcast_to(active[:, None], (B, T))
+    if token_mask is not None:
+        wmask = token_mask if wmask is None else (wmask & token_mask)
+    if wmask is not None:
+        # pad / inactive tokens must not touch the pool: redirect their
+        # writes to the (nonexistent) page n_pages and drop them
+        phys = jnp.where(wmask, phys, n_pages)
+    ck = cache["k_pages"].at[phys, within].set(
+        k.astype(cache["k_pages"].dtype), mode="drop")
+    cv = cache["v_pages"].at[phys, within].set(
+        v.astype(cache["v_pages"].dtype), mode="drop")
+    new_cache = {"k_pages": ck, "v_pages": cv}
+    if T == 1:
+        lengths = batch_pos[:, 0] + 1
+        y = paged_decode_attention_op(q[:, 0], ck, cv, block_tables, lengths)
+        return y.reshape(B, 1, -1), new_cache
+    offsets = batch_pos[:, 0]
+    kg = gather_pages(ck, block_tables)
+    vg = gather_pages(cv, block_tables)
+    y = chunked_prefill_attention_op(q, kg, vg, offsets)
+    return y.reshape(B, T, -1), new_cache
+
+
 def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
                   cache: Optional[dict] = None, pos_offset=0,
                   window_override: Optional[int] = None,
                   active: Optional[jax.Array] = None,
                   token_mask: Optional[jax.Array] = None,
                   valid_len: Optional[jax.Array] = None,
-                  unroll: bool = False, append_external: bool = False):
+                  unroll: bool = False, append_external: bool = False,
+                  block_tables=None, page_size: int = 0):
     """Self-attention. Returns (y, new_cache).
 
     ``pos_offset`` may be a scalar or a per-request (B,) vector (unified
     decode batches where each request sits at a different length).
     ``active``: optional (B,) bool — cache writes for inactive slots are
     suppressed (empty pool slots in the serving engine).
+    ``block_tables`` (with a paged cache holding ``k_pages``/``v_pages``)
+    selects the paged-attention path.
     """
     B, T, _ = x.shape
     window = window_override if window_override is not None else (
         cfg.window if kind == "local_attn" else 0)
     q, k, v = _project_qkv(p, cfg, x, x)
+
+    if cache is not None and "k_pages" in cache:
+        assert block_tables is not None and page_size > 0, \
+            "paged cache needs block_tables + page_size"
+        po = jnp.asarray(pos_offset)
+        if po.ndim == 0:
+            batch_pos = jnp.broadcast_to((po + jnp.arange(T))[None], (B, T))
+        else:
+            batch_pos = po[:, None] + jnp.arange(T)[None]
+        if cfg.pos_embedding == "rope":
+            sin, cos = rope_tables(batch_pos, cfg.hd, cfg.rope_theta,
+                                   cfg.rope_fraction)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        y, new_cache = _paged_attention_fwd(
+            p, q, k, v, cfg, cache, batch_pos, block_tables, page_size,
+            active, token_mask)
+        return y @ p["wo"], new_cache
 
     if cache is None:
         positions = jnp.arange(T)
@@ -658,13 +728,15 @@ def init_mixer(pf: ParamFactory, cfg: ModelConfig, kind: str):
 
 def mixer_fwd(kind: str, p, x, cfg: ModelConfig, *, cache=None, pos_offset=0,
               window_override=None, active=None, token_mask=None,
-              valid_len=None, unroll=False, append_external=False):
+              valid_len=None, unroll=False, append_external=False,
+              block_tables=None, page_size=0):
     if kind in ("attn", "local_attn"):
         return attention_fwd(p, x, cfg, kind=kind, cache=cache,
                              pos_offset=pos_offset,
                              window_override=window_override, active=active,
                              token_mask=token_mask, valid_len=valid_len,
-                             unroll=unroll, append_external=append_external)
+                             unroll=unroll, append_external=append_external,
+                             block_tables=block_tables, page_size=page_size)
     if kind == "ssd":
         return ssd_fwd(p, x, cfg, cache=cache, pos_offset=pos_offset,
                        active=active, token_mask=token_mask,

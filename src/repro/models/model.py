@@ -197,17 +197,62 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ==========================================================================
+# paged cache construction (block-table KV pool)
+# ==========================================================================
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Paged KV applies to pure full-attention decoders: every layer's
+    cache grows per token and positions are append-only.  Sliding-window
+    ring buffers and recurrent (SSD / RG-LRU) state are O(1)-bounded and
+    keep the dense slot cache; encoder-decoder and stub-frontend archs
+    prefill below the token embedding and stay dense too."""
+    return (all(k == "attn" for k in cfg.layer_pattern)
+            and not cfg.tail_kinds
+            and not cfg.cross_attention
+            and not cfg.window
+            and cfg.arch_type not in ("vlm", "audio"))
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     abstract: bool = False):
+    """Physical page pools, stacked over groups for the scan.
+
+    Unlike ``init_cache`` there is no per-slot sequence axis: slots map
+    logical positions to (page, offset) through a block table held by
+    the engine's ``BlockAllocator`` and passed into ``forward`` per
+    batch.  No ``pos`` array either — a paged position is its logical
+    index by construction."""
+    if not supports_paged_kv(cfg):
+        raise ValueError(f"{cfg.name}: layer pattern "
+                         f"{cfg.layer_pattern} cannot use a paged KV cache")
+    G, dt = cfg.n_groups, _dtype(cfg)
+
+    def make(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    caches = []
+    for _ in cfg.layer_pattern:
+        caches.append({
+            "k_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd)),
+            "v_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd)),
+        })
+    return {"blocks": tuple(caches)}
+
+
+# ==========================================================================
 # forward
 # ==========================================================================
 def _block_fwd(kind: str, bp, x, cfg: ModelConfig, *, cache, pos_offset,
                window_override, cross_cache=None, enc_out=None, active=None,
                token_mask=None, valid_len=None, unroll=False,
-               append_external=False):
+               append_external=False, block_tables=None, page_size=0):
     h, new_cache = mixer_fwd(
         kind, bp["mixer"], norm_fwd(bp["norm1"], x, cfg.norm), cfg,
         cache=cache, pos_offset=pos_offset, window_override=window_override,
         active=active, token_mask=token_mask, valid_len=valid_len,
-        unroll=unroll, append_external=append_external)
+        unroll=unroll, append_external=append_external,
+        block_tables=block_tables, page_size=page_size)
     x = x + h
     new_cross = None
     if cfg.cross_attention and "cross" in bp:
@@ -244,11 +289,13 @@ def forward(params, cfg: ModelConfig, tokens, *, cache=None, pos_offset=0,
             active=None, n_valid=None, last_only: bool = False,
             remat: bool = False, unroll: bool = False,
             append_external: bool = False,
-            logits_slice: Optional[int] = None):
+            logits_slice: Optional[int] = None,
+            block_tables=None, page_size: int = 0):
     """Run the decoder stack.
 
     tokens: (B, T) int32.
-    cache: from init_cache (serving) or None (training/full prefill).
+    cache: from init_cache (serving) or None (training/full prefill);
+        from init_paged_cache when ``block_tables`` is given.
     pos_offset: absolute position of tokens[:, 0] (scalar, may be traced).
     extra_embeds: (B, Tp, d_model) patch embeddings prepended to the token
         embeddings (VLM stub frontend).
@@ -256,6 +303,10 @@ def forward(params, cfg: ModelConfig, tokens, *, cache=None, pos_offset=0,
         encoder and fresh cross-KV.
     logits_slice: if set, only the last ``logits_slice`` positions are
         projected to vocab (decode wants 1; saves a (T, vocab) matmul).
+    block_tables: (B, pages_per_slot) int32 physical-page table for a
+        paged cache; with ``page_size`` it routes attention through the
+        Pallas paged-decode / chunked-prefill kernels (interpret mode on
+        CPU).
     Returns (logits, new_cache, aux_loss).
     """
     dt = _dtype(cfg)
@@ -310,7 +361,8 @@ def forward(params, cfg: ModelConfig, tokens, *, cache=None, pos_offset=0,
                 cross_cache=None if cc in (None, "fresh") else cc,
                 enc_out=enc_out, active=active,
                 token_mask=token_mask, valid_len=n_valid, unroll=unroll,
-                append_external=append_external)
+                append_external=append_external,
+                block_tables=block_tables, page_size=page_size)
             aux = aux + a
             new_caches.append(nc if nc is not None else 0)
             if cfg.cross_attention:

@@ -246,6 +246,7 @@ class ElasticDynaServePolicy(DynaServePolicy):
                 n_queued=inst.n_queued,
                 draining=inst.draining,
                 role_bias=inst.role_bias,
+                mem_pressure=sim.kv_pressure(inst.iid),
             ))
         return out
 

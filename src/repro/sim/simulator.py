@@ -22,9 +22,10 @@ the old behaviour.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import BatchCostModel, WorkItem
+from repro.core.paging import pages_for
 from repro.core.session import (
     Backend, ExecResult, InstanceState, MicroState, ReqState, ServeHandle,
     ServeSession, SessionConfig, SessionMetrics, SessionStallError,
@@ -46,15 +47,73 @@ class SimBackend(Backend):
     """Virtual-clock substrate: batches take ``BatchCostModel.latency``
     simulated seconds and complete as deferred events, so concurrent
     instances overlap in simulated time.  No real tokens are produced
-    (streaming handles receive output positions)."""
+    (streaming handles receive output positions).
+
+    With ``page_size`` + ``pages_per_instance`` the backend models the
+    engine's paged KV pool: a placed micro-request occupies
+    ``ceil(pos / page_size)`` pages once its KV is resident (a beta
+    waiting on its handoff holds nothing, exactly like the engine's
+    ``BlockAllocator``), so the memory-aware scheduler, admission
+    control, and the elastic pressure signal load-shed identically on
+    the simulator and on real engines."""
 
     virtual_clock = True
     emits_tokens = False
     max_chunk = None
 
-    def __init__(self, cost: BatchCostModel):
+    def __init__(self, cost: BatchCostModel, page_size: Optional[int] = None,
+                 pages_per_instance: Optional[int] = None):
+        if bool(page_size) != bool(pages_per_instance):
+            raise ValueError(
+                "page_size and pages_per_instance must be set together "
+                f"(got page_size={page_size}, "
+                f"pages_per_instance={pages_per_instance}); a half-"
+                "configured pool would silently disable the occupancy "
+                "model the engine enforces")
         self.cost = cost
+        self.page_size = page_size
+        self.pages_per_instance = pages_per_instance
+        self._placed: Dict[int, Dict[str, MicroState]] = {}
 
+    # ---------------- page-occupancy model ----------------
+    def on_place(self, iid: int, micro: MicroState) -> bool:
+        if self.page_size:
+            self._placed.setdefault(iid, {})[micro.rid] = micro
+        return True
+
+    def release(self, micro: MicroState) -> None:
+        if self.page_size:
+            self._placed.get(micro.iid, {}).pop(micro.rid, None)
+
+    def on_migrate(self, micro: MicroState, src_iid: int,
+                   dst_iid: int) -> bool:
+        if self.page_size:
+            if micro.pos > 0 and micro.ready != float("inf"):
+                # resident KV must fit the destination pool (the engine
+                # backend declines the move the same way)
+                need = pages_for(micro.pos, self.page_size)
+                free = self.free_pages(dst_iid)
+                if free is not None and free < need:
+                    return False
+            self._placed.get(src_iid, {}).pop(micro.rid, None)
+            self._placed.setdefault(dst_iid, {})[micro.rid] = micro
+        return True
+
+    def _used_pages(self, iid: int) -> int:
+        p = self.page_size
+        return sum(pages_for(m.pos, p)
+                   for m in self._placed.get(iid, {}).values()
+                   if m.ready != float("inf") and m.pos > 0)
+
+    def free_pages(self, iid: int) -> Optional[int]:
+        if not self.page_size:
+            return None
+        return max(0, self.pages_per_instance - self._used_pages(iid))
+
+    def total_pages(self, iid: int) -> Optional[int]:
+        return self.pages_per_instance if self.page_size else None
+
+    # ---------------- execution ----------------
     def execute(self, inst: InstanceState,
                 grants: Sequence[Tuple[MicroState, int]],
                 decs: Sequence[MicroState]) -> ExecResult:

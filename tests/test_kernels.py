@@ -1,6 +1,8 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp
 oracles in kernels/ref.py (interpret=True executes the kernel body on
-CPU)."""
+CPU).  The parity sweeps cover ragged sequence lengths, every GQA group
+size the assigned archs use (MHA / GQA / MQA), and the page-size range
+of the paged KV pool."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,8 @@ import pytest
 
 from repro.kernels.ops import (
     chunked_prefill_attention_op, chunked_prefill_attention_ref,
-    paged_decode_attention_op, paged_decode_attention_ref,
+    gather_pages, paged_decode_attention_op, paged_decode_attention_ref,
+    paged_prefill_attention_op,
 )
 
 RNG = np.random.default_rng(7)
@@ -79,6 +82,87 @@ def test_paged_decode_vs_ref(dtype, B, H, KV, hd, page, ppseq):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("page", [8, 16, 32])
+@pytest.mark.parametrize("qpk", [1, 2, 4, 8])
+def test_paged_decode_gqa_and_page_size_sweep(qpk, page):
+    """Parity across GQA group sizes x page sizes with ragged lengths
+    (every sequence at a different, non-page-aligned context)."""
+    B, KV, hd, ppseq = 3, 2, 64, 3
+    H = KV * qpk
+    n_pages = B * ppseq + 1
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.asarray(
+        RNG.permutation(n_pages)[:B * ppseq].reshape(B, ppseq), jnp.int32)
+    # ragged: 1 token, mid-page, page-aligned
+    lens = jnp.asarray([1, page * 2 - 3, page * ppseq], jnp.int32)
+    out = paged_decode_attention_op(q, kp, vp, tbl, lens, interpret=True)
+    exp = paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("page,Tq,ctx", [
+    (8, 5, 11),       # ragged chunk, ragged prefix
+    (16, 16, 16),     # page-aligned resume
+    (32, 9, 0),       # fresh prefill, oversized page
+])
+def test_paged_prefill_matches_dense_chunked_ref(page, Tq, ctx):
+    """The paged-prefill path (gather pages -> chunked kernel) must equal
+    the dense chunked-prefill oracle on the logically identical KV."""
+    B, H, KV, hd = 2, 4, 2, 32
+    total = ctx + Tq
+    ppseq = -(-total // page) + 1
+    n_pages = B * ppseq + 1
+    q = _rand((B, Tq, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.asarray(
+        RNG.permutation(n_pages)[:B * ppseq].reshape(B, ppseq), jnp.int32)
+    off = jnp.full((B,), ctx, jnp.int32)
+    out = paged_prefill_attention_op(q, kp, vp, tbl, off, interpret=True)
+    k = gather_pages(kp, tbl)
+    v = gather_pages(vp, tbl)
+    exp = chunked_prefill_attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_unwritten_page_slack_is_masked():
+    """Garbage in the not-yet-written tail of the last page (and in
+    sentinel table entries past the sequence) must not leak into the
+    chunk's outputs — causality masks everything past offsets+Tq."""
+    B, Tq, H, KV, hd, page = 1, 6, 4, 2, 32, 8
+    ppseq, n_pages = 3, 6
+    q = _rand((B, Tq, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.asarray([[1, 2, 0]], jnp.int32)   # page 0 = sentinel entry
+    off = jnp.asarray([4], jnp.int32)           # chunk covers [4, 10)
+    out1 = paged_prefill_attention_op(q, kp, vp, tbl, off, interpret=True)
+    kp2 = kp.at[2, 2:].set(1e6).at[0].set(-1e6)  # poison beyond pos 10
+    vp2 = vp.at[2, 2:].set(-1e6).at[0].set(1e6)
+    out2 = paged_prefill_attention_op(q, kp2, vp2, tbl, off, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_chunked_prefill_per_row_ragged_offsets():
+    """Mixed unified batches give every row its own resume offset; the
+    kernel's scalar-prefetched offsets must mask per row."""
+    B, Tq, S, H, hd = 3, 8, 40, 4, 32
+    q = _rand((B, Tq, H, hd), jnp.float32)
+    k = _rand((B, S, H, hd), jnp.float32)
+    v = _rand((B, S, H, hd), jnp.float32)
+    off = jnp.asarray([0, 13, 32 - Tq], jnp.int32)
+    out = chunked_prefill_attention_op(q, k, v, off, bq=8, bk=8,
+                                       interpret=True)
+    exp = chunked_prefill_attention_ref(q, k, v, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_paged_decode_ignores_pages_beyond_length():

@@ -1,0 +1,455 @@
+"""Paged KV subsystem end-to-end: block-table allocator, Pallas paged
+attention in the engine (interpret mode on CPU), page-granular handoff,
+memory-aware batching/preemption, and the memory-pressure signal in
+admission control and the elastic controller."""
+import numpy as np
+import pytest
+
+from repro.core.costmodel import A100, BatchCostModel
+from repro.core.elastic import (
+    ElasticConfig, InstanceStat, PoolController, ScaleUp,
+)
+from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
+from repro.core.request import INTERACTIVE, Request, RequestState
+from repro.core.session import ServeSession, SessionConfig
+from repro.engine.block_allocator import (
+    BlockAllocator, CapacityError, OutOfPages,
+)
+from repro.engine.runner import bucket_ladder, bucket_of
+from repro.sim.policies import ColocationPolicy, DynaServePolicy
+from repro.sim.simulator import SimBackend
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+def test_block_allocator_alloc_append_free():
+    a = BlockAllocator(n_pages=8, page_size=4, n_slots=2)
+    a.ensure(0, 10)                       # 3 pages
+    assert a.len_of(0) == 10 and len(a.pages_of(0)) == 3
+    assert a.free_pages == 5 and a.used_pages == 3
+    a.ensure(0, 11)                       # fits the third page
+    assert len(a.pages_of(0)) == 3
+    a.ensure(1, 20)                       # 5 pages
+    assert a.free_pages == 0
+    assert a.pressure == 1.0
+    # tables are disjoint
+    assert not set(a.pages_of(0)) & set(a.pages_of(1))
+    assert a.free_slot(1) == 5
+    assert a.free_pages == 5 and a.pages_of(1) == []
+
+
+def test_block_allocator_out_of_pages_is_typed_and_atomic():
+    a = BlockAllocator(n_pages=4, page_size=4, n_slots=2)
+    a.ensure(0, 12)
+    with pytest.raises(OutOfPages):
+        a.ensure(1, 9)                    # needs 3, only 1 free
+    assert isinstance(OutOfPages("x"), CapacityError)
+    # failed ensure must not leak pages
+    assert a.free_pages == 1 and a.pages_of(1) == []
+    a.ensure(1, 4)                        # the last page still works
+    assert a.free_pages == 0
+
+
+def test_block_allocator_trim_keeps_slot():
+    a = BlockAllocator(n_pages=4, page_size=4, n_slots=1)
+    a.ensure(0, 16)
+    assert a.trim(0) == 4                 # preemption path
+    assert a.free_pages == 4 and a.len_of(0) == 0
+    a.ensure(0, 8)                        # slot reusable afterwards
+    assert len(a.pages_of(0)) == 2
+
+
+def test_table_array_zero_pads():
+    a = BlockAllocator(n_pages=6, page_size=2, n_slots=3)
+    a.ensure(1, 5)
+    t = a.table_array(4)
+    assert t.shape == (3, 4) and t.dtype == np.int32
+    assert list(t[1, :3]) == a.pages_of(1)
+    assert t[0].sum() == 0 and t[2].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellites: typed slot exhaustion + derived bucket ladder
+# ---------------------------------------------------------------------------
+def test_engine_alloc_raises_capacity_error_not_index_error():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine import InstanceEngine
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = InstanceEngine(cfg, params, n_slots=1, max_len=64)
+    eng.alloc("a")
+    with pytest.raises(CapacityError):
+        eng.alloc("b")
+
+
+def test_bucket_ladder_derived_from_max_chunk():
+    assert bucket_ladder(512) == (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+    assert bucket_ladder(2048)[-1] == 2048
+    assert bucket_of(700, bucket_ladder(2048)) == 1024
+    # the hardcoded 512 ceiling is gone for engines configured larger
+    with pytest.raises(ValueError):
+        bucket_of(513)                    # default ladder still bounded
+    assert bucket_of(513, bucket_ladder(513)) == 1024
+
+
+# ---------------------------------------------------------------------------
+# Engine: paged attention path
+# ---------------------------------------------------------------------------
+def _greedy(eng, slot, prompt, n, chunk=None):
+    from repro.engine import BatchItem
+    pos = 0
+    chunks = [prompt] if chunk is None else \
+        [prompt[i:i + chunk] for i in range(0, len(prompt), chunk)]
+    for i, c in enumerate(chunks):
+        last = i == len(chunks) - 1
+        out = eng.run_batch([BatchItem(slot, c, pos, want_logits=last)])
+        pos += len(c)
+    toks = [int(out[slot].argmax())]
+    for _ in range(n - 1):
+        out = eng.run_batch([BatchItem(
+            slot, np.array([toks[-1]], np.int32), pos, want_logits=True)])
+        toks.append(int(out[slot].argmax()))
+        pos += 1
+    return toks
+
+
+def test_paged_engine_matches_dense_tokens():
+    """Decode through the Pallas paged-decode kernel (interpret mode on
+    CPU) and chunked prefill through the chunked-prefill kernel produce
+    the same greedy tokens as the dense slot cache."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine import InstanceEngine
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, 37).astype(np.int32)
+    dense = InstanceEngine(cfg, params, n_slots=2, max_len=96,
+                           kv_mode="dense")
+    ref = _greedy(dense, dense.alloc("r"), prompt, 6)
+    paged = InstanceEngine(cfg, params, n_slots=2, max_len=96)
+    assert paged.paged                     # auto mode picked the page pool
+    got = _greedy(paged, paged.alloc("r"), prompt, 6, chunk=16)
+    assert got == ref
+
+
+def test_paged_engine_grows_past_max_len():
+    """A request grows past the per-slot ``max_len`` by appending pages —
+    the pool, not the slot shape, bounds sequence length."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine import BatchItem, InstanceEngine
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = InstanceEngine(cfg, params, n_slots=2, max_len=64, page_size=8,
+                         n_pages=16, max_chunk=64)
+    s = eng.alloc("big")
+    seq = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, 100).astype(np.int32)
+    pos = 0
+    for i in range(0, 96, 48):
+        eng.run_batch([BatchItem(s, seq[i:i + 48], i)])
+        pos = i + 48
+    out = eng.run_batch([BatchItem(s, seq[96:], 96, want_logits=True)])
+    tok, pos = int(out[s].argmax()), 100
+    for _ in range(3):                     # 100+ tokens > max_len=64
+        out = eng.run_batch([BatchItem(
+            s, np.array([tok], np.int32), pos, want_logits=True)])
+        tok, pos = int(out[s].argmax()), pos + 1
+    assert pos > eng.max_len
+    assert eng.allocator.len_of(s) == pos
+    # pool exhaustion is a typed signal, not an IndexError
+    s2 = eng.alloc("greedy")
+    with pytest.raises(OutOfPages):
+        eng.run_batch([BatchItem(
+            s2, np.random.default_rng(3).integers(
+                0, cfg.vocab_size, 40).astype(np.int32), 0)])
+
+
+def test_page_granular_export_import():
+    """Handoff ships whole pages: piece spans align to page boundaries
+    and the imported KV continues generation exactly like a single
+    engine would."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine import BatchItem, InstanceEngine
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(4).integers(
+        0, cfg.vocab_size, 30).astype(np.int32)
+    one = InstanceEngine(cfg, params, n_slots=2, max_len=96)
+    ref = _greedy(one, one.alloc("r"), prompt, 5)
+
+    A = InstanceEngine(cfg, params, n_slots=2, max_len=96)
+    B = InstanceEngine(cfg, params, n_slots=2, max_len=96)
+    sa = A.alloc("r")
+    A.run_batch([BatchItem(sa, prompt[:20], 0)])
+    pieces = A.export_state(sa, upto=20, chunk=10)
+    page = A.page_size
+    for p in pieces:
+        lo, hi = p["span"]
+        assert lo % page == 0              # piece starts on a page edge
+        assert p["page_size"] == page
+        for blk in p["pages"]:
+            assert blk["k"].shape[2] % page == 0 or blk["k"].shape[2] == page
+    assert pieces[-1]["span"][1] == 20
+    sb = B.alloc("r")
+    B.import_state(sb, pieces)
+    assert B.allocator.len_of(sb) >= 20
+    out = B.run_batch([BatchItem(sb, prompt[20:], 20, want_logits=True)])
+    toks, pos = [int(out[sb].argmax())], len(prompt)
+    for _ in range(4):
+        out = B.run_batch([BatchItem(
+            sb, np.array([toks[-1]], np.int32), pos, want_logits=True)])
+        toks.append(int(out[sb].argmax()))
+        pos += 1
+    assert toks == ref
+
+
+def test_state_bytes_reflects_page_padding():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine import InstanceEngine
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dense = InstanceEngine(cfg, params, n_slots=1, max_len=64,
+                           kv_mode="dense")
+    paged = InstanceEngine(cfg, params, n_slots=1, max_len=64, page_size=8)
+    # 13 tokens ship as 2 whole 8-token pages
+    assert paged.state_bytes(13) == dense.state_bytes(16)
+    assert paged.state_bytes(16) == dense.state_bytes(16)
+
+
+# ---------------------------------------------------------------------------
+# Memory-aware local scheduling
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cost():
+    from repro.configs import get_config
+    return BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+def test_scheduler_caps_prefill_to_free_pages(cost):
+    ls = LocalScheduler(cost, slo=0.100)
+    pq = [PrefillWork("p", 4096, 0)]
+    free = ls.next_batch(pq, [], free_pages=None, page_size=None)
+    assert free.prefill_tokens > 64        # unconstrained grants plenty
+    tight = ls.next_batch(pq, [], free_pages=4, page_size=16)
+    assert tight.prefill_tokens == 64      # 4 pages * 16 tokens
+    assert tight.starved
+
+
+def test_scheduler_defers_decodes_on_page_boundary(cost):
+    ls = LocalScheduler(cost, slo=0.100)
+    # both streams sit exactly on a page boundary: each next token needs
+    # a fresh page, but only one page is free
+    dq = [DecodeWork("a", 64), DecodeWork("b", 128)]
+    plan = ls.next_batch([], dq, free_pages=1, page_size=64)
+    assert [d.rid for d in plan.decodes] == ["a"]
+    assert plan.starved
+    # mid-page streams need no new page and are unaffected
+    dq = [DecodeWork("a", 65), DecodeWork("b", 130)]
+    plan = ls.next_batch([], dq, free_pages=0, page_size=64)
+    assert len(plan.decodes) == 2 and not plan.starved
+
+
+def test_scheduler_prefill_uses_last_page_slack(cost):
+    ls = LocalScheduler(cost, slo=0.100)
+    # ctx 10 of a 16-token page: 6 slack tokens + 1 free page = 22 max
+    plan = ls.next_batch([PrefillWork("p", 4096, 10)], [],
+                         free_pages=1, page_size=16)
+    assert plan.prefill_tokens == 22 and plan.starved
+
+
+# ---------------------------------------------------------------------------
+# Session: identical load-shedding on sim and engine + preemption
+# ---------------------------------------------------------------------------
+def _sim_session(cost, pages, page=16, **cfg):
+    backend = SimBackend(cost, page_size=page, pages_per_instance=pages)
+    return ServeSession(backend, ColocationPolicy(chunk=64, slo_aware=False),
+                        SessionConfig(n_instances=1, **cfg))
+
+
+def test_sim_and_engine_load_shed_identically(cost):
+    """The page-pool admission decision is commitment-based (pages the
+    placed requests will grow into, computed from the shared session
+    state) — the same state machine on both substrates: same capacity,
+    same arrivals => the same requests are shed."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # 8 pages of 16 tokens = 128-token pool per instance
+    ebackend = EngineBackend(cfg, params, n_slots=4, max_len=128,
+                             page_size=16, n_pages=8)
+    esess = ServeSession(ebackend, ColocationPolicy(chunk=64,
+                                                    slo_aware=False),
+                         SessionConfig(n_instances=1, admission=True))
+    ssess = _sim_session(cost, pages=8, admission=True)
+    rng = np.random.default_rng(0)
+    lens = [(40, 8)] * 4      # 3 pages each: the 3rd and 4th cannot fit
+    outcomes = {}
+    for sess, name in ((esess, "engine"), (ssess, "sim")):
+        got = []
+        for i, (P, D) in enumerate(lens):
+            if name == "engine":
+                h = sess.generate(rng.integers(0, cfg.vocab_size, P), D,
+                                  slo=INTERACTIVE, rid=f"r{i}")
+            else:
+                h = sess.generate(prompt_len=P, decode_len=D,
+                                  slo=INTERACTIVE, rid=f"r{i}")
+            got.append(h.state == RequestState.REJECTED)
+        outcomes[name] = got
+    assert outcomes["engine"] == outcomes["sim"] == \
+        [False, False, True, True]
+    # survivors complete with every token on both substrates
+    for sess in (esess, ssess):
+        for rid in ("r0", "r1"):
+            h = sess.handles[rid]
+            assert len(list(h)) == 8 and h.state == RequestState.DONE
+
+
+def test_memory_pressure_preempts_and_completes(cost):
+    """When resident decodes outgrow the pool, the session preempts the
+    youngest victim's KV (recompute) instead of stalling; the oldest
+    request is never evicted, so both still finish with all tokens."""
+    # each request needs 12 pages; the pool holds 16: either fits alone,
+    # both cannot co-reside at full length
+    session = _sim_session(cost, pages=16, page=16)
+    hs = [session.generate(prompt_len=60, decode_len=120, rid=f"r{i}")
+          for i in range(2)]
+    for h in hs:
+        assert len(list(h)) == 120
+    m = session.metrics()
+    assert m.completed == 2
+    assert m.preemptions >= 1
+    assert any("preempt" in e for _, e in m.pool_events)
+
+
+def test_engine_preemption_recompute_keeps_tokens_exact():
+    """Engine-side recompute preemption: the preempted request's KV is
+    rebuilt from prompt+generated and the stream continues exactly."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(2)]
+
+    # reference: roomy pool, no preemption
+    roomy = EngineBackend(cfg, params, n_slots=4, max_len=128)
+    ref_sess = ServeSession(roomy, ColocationPolicy(chunk=64,
+                                                    slo_aware=False),
+                            SessionConfig(n_instances=1))
+    refs = [list(ref_sess.generate(p, 20, rid=f"a{i}"))
+            for i, p in enumerate(prompts)]
+
+    # tight pool: 6 pages of 8 tokens = 48 tokens < 2*(24+20)
+    tight = EngineBackend(cfg, params, n_slots=4, max_len=128,
+                          page_size=8, n_pages=7)
+    sess = ServeSession(tight, ColocationPolicy(chunk=64, slo_aware=False),
+                        SessionConfig(n_instances=1))
+    hs = [sess.generate(p, 20, rid=f"b{i}") for i, p in enumerate(prompts)]
+    outs = [list(h) for h in hs]
+    assert sess.preemptions >= 1
+    assert outs == refs
+
+
+def test_kv_pressure_surfaces_to_session(cost):
+    session = _sim_session(cost, pages=10, page=16)
+    assert session.kv_pressure(0) == 0.0
+    h = session.generate(prompt_len=64, decode_len=4, rid="r")
+    list(h)
+    # terminal request released its pages
+    assert session.kv_pressure(0) == 0.0
+    # dense backends always report zero pressure
+    dense = ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                         SessionConfig(n_instances=1))
+    assert dense.kv_pressure(0) == 0.0
+
+
+def test_paged_pool_full_trace_with_handoffs_conserves_tokens(cost):
+    """DynaServe splitting + elastic pool on a page-bounded sim: beta
+    handoffs are page-budgeted (evict-younger or recompute fallback), so
+    an overcommitted pool still completes every request token-exactly."""
+    from repro.core.elastic import ElasticConfig
+    from repro.data import generate_trace
+    from repro.sim.policies import ElasticDynaServePolicy
+
+    backend = SimBackend(cost, page_size=256, pages_per_instance=48)
+    policy = ElasticDynaServePolicy(cost, elastic=ElasticConfig(
+        min_instances=1, max_instances=4))
+    reqs = generate_trace("burstgpt", 3.0, 40, seed=0)
+    m = ServeSession(backend, policy,
+                     SessionConfig(n_instances=1)).run(reqs)
+    assert m.completed == len(reqs)
+    assert m.tokens_total == sum(r.D for r in reqs)
+    assert m.preemptions > 0          # the pool really was under pressure
+
+
+def test_unsatisfiable_footprint_raises_instead_of_spinning(cost):
+    """A request whose KV footprint exceeds every pool member can never
+    run; the recurring pool-control event must not mask the stall."""
+    from repro.core.elastic import ElasticConfig
+    from repro.core.session import SessionStallError
+    from repro.data import generate_trace
+    from repro.sim.policies import ElasticDynaServePolicy
+
+    backend = SimBackend(cost, page_size=64, pages_per_instance=4)
+    policy = ElasticDynaServePolicy(cost, elastic=ElasticConfig(
+        max_instances=2))
+    session = ServeSession(backend, policy, SessionConfig(n_instances=1))
+    with pytest.raises(SessionStallError):
+        session.run(generate_trace("burstgpt", 2.0, 5, seed=1))
+
+
+# ---------------------------------------------------------------------------
+# Elastic controller: pressure signal
+# ---------------------------------------------------------------------------
+def _stat(iid, drain=0.1, queued=1, pressure=0.0, draining=False):
+    return InstanceStat(iid=iid, drain_time=drain, queued_prefill_tokens=0,
+                        queued_decode_tokens=0, n_queued=queued,
+                        draining=draining, role_bias=0.0,
+                        mem_pressure=pressure)
+
+
+def test_pool_controller_scales_up_on_kv_pressure():
+    ctl = PoolController(ElasticConfig(max_instances=4,
+                                       scale_up_pressure=0.85))
+    # drain time is healthy, but one member is nearly out of pages
+    acts = ctl.decide([_stat(0, drain=0.2, pressure=0.95)], now=10.0)
+    ups = [a for a in acts if isinstance(a, ScaleUp)]
+    assert ups and "pressure" in ups[0].reason
+
+
+def test_pool_controller_blocks_scale_down_under_pressure():
+    cfg = ElasticConfig(min_instances=1, max_instances=4,
+                        scale_down_cooldown=0.0)
+    ctl = PoolController(cfg)
+    low = [_stat(0, drain=0.01, queued=0), _stat(1, drain=0.01, queued=0)]
+    assert any(not isinstance(a, ScaleUp) for a in ctl.decide(low, 10.0))
+    ctl2 = PoolController(cfg)
+    hot = [_stat(0, drain=0.01, queued=0, pressure=0.99),
+           _stat(1, drain=0.01, queued=0)]
+    from repro.core.elastic import DrainInstance
+    acts = ctl2.decide(hot, 10.0)
+    assert not any(isinstance(a, DrainInstance) for a in acts)
