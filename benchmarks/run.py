@@ -26,6 +26,7 @@ MODULES = [
     "ablation_split",
     "elastic_shift",
     "online_serving",
+    "prefix_reuse",
     "kernel_bench",
     "roofline",
 ]

@@ -25,12 +25,19 @@ class InstanceView:
     retiring them); ``role_bias`` is the pool controller's drift in
     [-1, 1] (+ = prefill-heavy, - = decode-heavy) used to steer alpha
     micro-requests toward prefill-leaning instances and beta
-    micro-requests toward decode-leaning ones.
+    micro-requests toward decode-leaning ones.  ``cached_prefix`` is
+    the arriving request's prompt prefix already resident in this
+    instance's shared-prefix KV cache (tokens, page-aligned): the
+    scheduler scores placements and split points on *effective*
+    (post-hit) prefill work, so a long cached prefix pulls the request
+    toward the instance that holds it and pushes the split point
+    earlier (less real prefill to balance against the decode side).
     """
     iid: int
     queue: List[QueuedWork]
     draining: bool = False
     role_bias: float = 0.0
+    cached_prefix: int = 0
 
 
 @dataclasses.dataclass
@@ -63,10 +70,16 @@ class GlobalScheduler:
         self._rr = 0
 
     # ------------------------------------------------------------------
-    def _work_of(self, mr: MicroRequest, ready: float = 0.0) -> QueuedWork:
+    def _work_of(self, mr: MicroRequest, ready: float = 0.0,
+                 cached: int = 0) -> QueuedWork:
+        """``cached`` is the target instance's cached-prefix length for
+        this request: the overlap with the micro's prompt span is
+        spliced, not prefilled, so the predictor only sees the
+        effective (post-hit) prefill work."""
+        hit = max(0, min(cached - mr.start, mr.prefill_tokens))
         return QueuedWork(
             rid=mr.rid,
-            prefill_remaining=mr.prefill_tokens,
+            prefill_remaining=mr.prefill_tokens - hit,
             decode_remaining=mr.decode_tokens,
             ctx=mr.start if mr.role == "beta" else 0,
             ready=ready,
@@ -93,10 +106,18 @@ class GlobalScheduler:
         # bias weight relative to typical drain so it reorders only
         # near-ties; the floor keeps it meaningful on an idle pool
         w = 0.25 * (sum(dt.values()) / len(cands)) + 1e-3
+        # a cached prefix is prefill work the alpha target simply skips:
+        # credit it at the SLO-paced prefill rate so the hit competes
+        # with (and usually beats) a slightly shorter queue elsewhere
+        saved = {i: 0.0 for i in cands}
+        if any(instances[i].cached_prefix for i in cands):
+            M = max(1, self.cost.max_prefill_tokens(self.predictor.slo, 0, 0))
+            t_tok = self.cost.mixed_batch_latency(M, 0, 0, 0) / M
+            saved = {i: instances[i].cached_prefix * t_tok for i in cands}
         rr = self._rr
         self._rr = (self._rr + 1) % n
         ia = min(cands, key=lambda i: (
-            dt[i] - w * instances[i].role_bias, (i - rr) % n))
+            dt[i] - w * instances[i].role_bias - saved[i], (i - rr) % n))
         ib = min((i for i in cands if i != ia), key=lambda i: (
             dt[i] + w * instances[i].role_bias, (i - rr) % n))
         return ia, ib
@@ -111,6 +132,9 @@ class GlobalScheduler:
         slo = r.slo.tbt if r.slo is not None else None
         ia, ib = self.pick_pair(instances)
         qa, qb = instances[ia].queue, instances[ib].queue
+        # cached-prefix lengths on the chosen alpha/beta targets: every
+        # probe below scores *effective* prefill (prompt minus hit)
+        ca, cb = instances[ia].cached_prefix, instances[ib].cached_prefix
         same_instance = ia == ib
         # Placement carries instance *ids*, not view indices, so callers
         # may pass a sparse/filtered view of an elastic pool.
@@ -120,19 +144,26 @@ class GlobalScheduler:
         # the instance to itself — run the request whole
         if same_instance:
             whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
-            t1 = self.predictor.completion_time(qa, self._work_of(whole),
-                                                slo=slo)
+            t1 = self.predictor.completion_time(
+                qa, self._work_of(whole, cached=ca), slo=slo)
             return Placement(whole, None, ia, None, 1.0, t1, 0.0, 0,
                              time.perf_counter() - t0)
 
-        # cold start: both instances idle -> PD-disaggregation split
+        # cold start: both instances idle -> PD-disaggregation split;
+        # the completion probes still score effective (post-hit)
+        # prefill, and the alpha side — chosen by pick_pair for its
+        # cached prefix — is the one that claims the hit, so the split
+        # point itself stays at the PD boundary (splitting *earlier*
+        # would hand the cached span to the instance that missed)
         if not qa and not qb:
             phi = r_eff.P / r_eff.L
             alpha, beta = split_request(r_eff, phi)
             t1 = self.predictor.completion_time(
-                qa, self._work_of(alpha) if alpha else None, slo=slo)
+                qa, self._work_of(alpha, cached=ca) if alpha else None,
+                slo=slo)
             t2 = self.predictor.completion_time(
-                qb, self._work_of(beta) if beta else None, slo=slo)
+                qb, self._work_of(beta, cached=cb) if beta else None,
+                slo=slo)
             return Placement(alpha, beta, ia if alpha else None,
                              ib if beta else None, phi, t1, t2, 0,
                              time.perf_counter() - t0)
@@ -145,9 +176,11 @@ class GlobalScheduler:
             probes += 1
             alpha, beta = split_request(r_eff, phi)
             t1 = self.predictor.completion_time(
-                qa, self._work_of(alpha) if alpha else None, slo=slo)
+                qa, self._work_of(alpha, cached=ca) if alpha else None,
+                slo=slo)
             t2 = self.predictor.completion_time(
-                qb, self._work_of(beta) if beta else None, slo=slo)
+                qb, self._work_of(beta, cached=cb) if beta else None,
+                slo=slo)
             gap = abs(t1 - t2)
             if best is None or gap < best[0]:
                 best = (gap, phi, alpha, beta, t1, t2)
@@ -166,8 +199,8 @@ class GlobalScheduler:
         # a handoff gap in the TBT stream, so take it only when it
         # clearly beats running the request whole on the idler instance.
         whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
-        t_whole = self.predictor.completion_time(qa, self._work_of(whole),
-                                                 slo=slo)
+        t_whole = self.predictor.completion_time(
+            qa, self._work_of(whole, cached=ca), slo=slo)
         if t_whole <= max(t1, t2) * (1.0 + self.split_gain_threshold):
             return Placement(whole, None, ia, None, 1.0, t_whole, 0.0,
                              probes, time.perf_counter() - t0)

@@ -55,6 +55,11 @@ class PrefillWork:
     remaining: int              # prefill tokens left
     ctx: int                    # tokens already cached (position of chunk)
     deadline: Optional[float] = None  # TTFT deadline (arrival + SLO ttft)
+    # Leading tokens of ``remaining`` resident in the instance's
+    # shared-prefix KV cache: they cost no compute (the pages are
+    # spliced, not prefilled), so the scheduler grants them without
+    # consuming the SLO prefill budget M or any free page.
+    cached: int = 0
 
 
 @dataclasses.dataclass
@@ -73,10 +78,17 @@ class BatchPlan:
     # growth — the session defers (pages free as requests finish) or
     # preempts a victim's cache instead of letting the engine overflow
     starved: bool = False
+    # granted tokens served from the shared-prefix cache (no compute)
+    cached_tokens: int = 0
 
     @property
     def prefill_tokens(self) -> int:
         return sum(g for _, g in self.prefills)
+
+    @property
+    def computed_prefill_tokens(self) -> int:
+        """Prefill tokens that actually run through the model."""
+        return self.prefill_tokens - self.cached_tokens
 
     @property
     def dnum(self) -> int:
@@ -113,7 +125,8 @@ class LocalScheduler:
     # ---------------- Algorithm 2 ----------------
     def record(self, plan: BatchPlan, measured: float) -> None:
         ctx = int(sum(d.ctx for d in plan.decodes) / max(1, plan.dnum))
-        self.profile.record(plan.prefill_tokens, ctx, plan.dnum, measured)
+        self.profile.record(plan.computed_prefill_tokens, ctx, plan.dnum,
+                            measured)
 
     def effective_slo(self, decodes: Sequence[DecodeWork]) -> float:
         """TBT budget for one batch: the tightest SLO-class target among
@@ -193,28 +206,37 @@ class LocalScheduler:
                 prefill_queue,
                 key=lambda w: w.deadline if w.deadline is not None
                 else float("inf"))
+        cached_total = 0
         for w in prefill_queue:
             if budget <= 0 or len(decodes) + len(grants) >= self.max_batch_requests:
                 break
-            g = min(w.remaining, budget)
+            # the cached head rides for free: its pages are spliced from
+            # the prefix cache, so it consumes neither the SLO budget M
+            # nor a free page — only the tail past it is "paid" work
+            free_head = max(0, min(w.cached, w.remaining))
+            paid = min(w.remaining - free_head, budget)
+            g = free_head + paid
             if mem_aware:
-                # slack in the last allocated page + whole free pages
-                slack = pages_for(w.ctx, page_size) * page_size - w.ctx
-                g_mem = slack + budget_pages * page_size
+                slack = pages_for(w.ctx + free_head, page_size) * \
+                    page_size - (w.ctx + free_head)
+                g_mem = free_head + slack + budget_pages * page_size
                 if g > g_mem:
                     g = g_mem
                     starved = True
             if g <= 0:
                 continue
             # avoid degenerate 1-token prefill slivers unless finishing
-            if g < min(self.min_chunk, w.remaining):
+            if g - free_head < min(self.min_chunk,
+                                   w.remaining - free_head):
                 break
             if mem_aware:
                 budget_pages -= pages_for(w.ctx + g, page_size) - \
-                    pages_for(w.ctx, page_size)
+                    pages_for(w.ctx + free_head, page_size)
             grants.append((w, g))
-            budget -= g
-        plen = sum(g for _, g in grants)
+            cached_total += min(free_head, g)
+            budget -= max(0, g - free_head)
+        plen = sum(g for _, g in grants) - cached_total
         p_ctx = grants[0][0].ctx if grants else 0
         lat = self.cost.mixed_batch_latency(plen, p_ctx, len(decodes), d_ctx)
-        return BatchPlan(decodes, grants, lat, starved=starved)
+        return BatchPlan(decodes, grants, lat, starved=starved,
+                         cached_tokens=cached_total)

@@ -78,6 +78,11 @@ class Request:
     slo: Optional[SLOClass] = None
     state: str = RequestState.QUEUED
     state_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # Prompt token ids (int array), when the trace carries them — the
+    # shared-prefix KV cache matches on these; length-only traces leave
+    # None and never hit.
+    prompt_tokens: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def to(self, state: str, now: float) -> None:
         """Transition the lifecycle; terminal states are sticky."""

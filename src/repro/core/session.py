@@ -84,6 +84,10 @@ class MicroState:
     ready: float = 0.0
     iid: int = -1
     cancelled: bool = False
+    # KV pages this micro borrows from the instance's shared-prefix
+    # cache (claimed, pinned): they cost no prefill compute and are
+    # counted ONCE per instance in admission commitments
+    shared_pages: int = 0
 
     @property
     def rid(self) -> str:
@@ -225,6 +229,45 @@ class Backend:
         """Drop the micro's resident KV (pages); the session re-queues
         the work as a recompute prefill."""
 
+    # ---- shared-prefix KV cache (repro.engine.prefix_cache) ----
+    # capability flag: True only when the backend actually runs a
+    # prefix cache — gates claims and the hit/lookup metrics so a
+    # cache-less (but page-pooled) run reports no cache activity
+    has_prefix_cache: bool = False
+
+    def cached_prefix(self, iid: int, req) -> int:
+        """Non-mutating probe: tokens of ``req``'s prompt cached on the
+        instance (page-aligned).  The global scheduler scores
+        placements and split points on *effective* prefill — prompt
+        minus this — and admission predicts TTFT with it."""
+        return 0
+
+    def claim_prefix(self, micro: MicroState, limit: int) -> int:
+        """Pin + splice the longest cached prefix of the micro's prompt
+        (capped to ``limit`` tokens, rounded down to pages) into its
+        slot.  Returns tokens claimed; the session advances ``pos``
+        past them so their prefill is skipped entirely."""
+        return 0
+
+    def pinned_prefix_pages(self, iid: int) -> int:
+        """Distinct cache pages pinned by live claims on the instance
+        (for counting shared pages once in admission commitments)."""
+        return 0
+
+    def on_handoff_import(self, beta: MicroState) -> None:
+        """The beta's KV import is about to allocate pages on its
+        destination.  Virtual backends mirror the cache eviction a real
+        import triggers (the engine's allocator reclaims LRU cached
+        pages inside ``import_state`` itself, so it needs no hook)."""
+
+    @property
+    def prefix_evictions(self) -> int:
+        """Cache pages reclaimed under memory pressure so far."""
+        return 0
+
+    def check_invariants(self) -> None:
+        """Debug hook: assert KV refcount/occupancy coherence."""
+
 
 # ---------------------------------------------------------------------------
 # Config + metrics
@@ -248,6 +291,10 @@ class SessionConfig:
     # count.  Leave True for run()/metrics(), which aggregate over the
     # retained states at the end.
     retain_finished: bool = True
+    # Debug: assert KV page refcount / prefix-cache coherence on every
+    # pool-control tick (the stall guard) — catches double-frees of
+    # shared pages the moment they happen instead of as bad tokens.
+    debug_kv_invariants: bool = False
 
 
 @dataclasses.dataclass
@@ -301,6 +348,17 @@ class SessionMetrics:
     cancelled: int = 0
     per_class: Dict[str, ClassReport] = dataclasses.field(
         default_factory=dict)
+    # shared-prefix KV cache
+    prefix_lookups: int = 0        # placement-time cache probes
+    prefix_hits: int = 0           # probes that claimed >= 1 page
+    prefix_saved_tokens: int = 0   # prefill tokens skipped via claims
+    prefix_handoff_saved_tokens: int = 0   # handoff tokens not shipped
+    prefix_evictions: int = 0      # cache pages reclaimed under pressure
+    prefill_tokens_computed: int = 0       # prefill tokens actually run
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_lookups)
 
     @property
     def goodput(self) -> float:
@@ -435,6 +493,11 @@ class ServeSession:
         self.migrations = 0
         self.migration_bytes = 0.0
         self.preemptions = 0
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_saved_tokens = 0
+        self.prefix_handoff_saved_tokens = 0
+        self.prefill_tokens_computed = 0
         self.n_instances_peak = self.cfg.n_instances
         self.pool_events: List[Tuple[float, str]] = []
         self.sched_overheads: List[float] = []
@@ -481,6 +544,8 @@ class ServeSession:
             if payload < len(self.instances):
                 self._maybe_start_batch(self.instances[payload])
         elif kind == "pool":
+            if self.cfg.debug_kv_invariants:
+                self.backend.check_invariants()
             self.policy.on_pool_check(self, self.now)
             if self._arrivals_left > 0 or self._open_requests > 0:
                 # The recurring pool event keeps the queue non-empty, so
@@ -561,6 +626,8 @@ class ServeSession:
             self._advance(self._wall())
         r = Request(rid, self.now, int(prompt_len), int(decode_len),
                     predicted_decode=predicted_decode, slo=slo)
+        if prompt is not None:
+            r.prompt_tokens = prompt     # prefix-cache matching key
         self.backend.register(r, prompt)
         handle = ServeHandle(self, r)
         self.handles[rid] = handle
@@ -694,6 +761,9 @@ class ServeSession:
             q_src = src.prefill_q if m in src.prefill_q else src.decode_q
             q_dst = dst.prefill_q if q_src is src.prefill_q else dst.decode_q
             q_src.remove(m)
+            # the source's prefix-cache claim does not travel: resident
+            # KV (shared pages included) ships as private pages
+            m.shared_pages = 0
             resident = resident_kv(m)
             if resident > 0:
                 nbytes = self.cost.kv_transfer_bytes(resident)
@@ -714,6 +784,54 @@ class ServeSession:
             self.migrations += moved
             self._maybe_retire(src)
         return moved
+
+    # ---------------- shared-prefix cache ----------------
+    def _claim_prefix(self, m: MicroState, limit: Optional[int] = None,
+                      count: bool = True) -> int:
+        """Try to serve the head of the micro's prefill from the
+        instance's prefix cache: claimed pages splice into its slot and
+        ``pos`` jumps past them — the local scheduler never sees the
+        cached tokens, so they consume neither the SLO prefill budget
+        nor free pages.  ``count=False`` keeps re-probes (the same
+        micro retried each batch) out of the hit-rate denominator —
+        each micro contributes one placement-time lookup and at most
+        one eventual hit, so ``hits <= lookups`` stays true."""
+        if not self.backend.has_prefix_cache \
+                or self.backend.page_size is None or m.pos != 0 \
+                or m.prefill_remaining <= 0:
+            return 0
+        if count:
+            self.prefix_lookups += 1
+        # always compute >= 1 prefill token: the pass consuming the
+        # span's last position is the one that emits its next token
+        lim = m.prefill_remaining if limit is None else limit
+        lim = min(lim, m.prefill_remaining - 1)
+        h = self.backend.claim_prefix(m, lim)
+        if h <= 0:
+            return 0
+        m.shared_pages = h // self.backend.page_size
+        m.pos = h
+        m.prefill_remaining -= h
+        self.prefix_hits += 1
+        self.prefix_saved_tokens += h
+        return h
+
+    def _claim_handoff_prefix(self, beta: MicroState) -> int:
+        """A beta about to receive its KV handoff first claims whatever
+        prefix its *destination* instance has cached — those pages never
+        cross the link."""
+        if not self.backend.has_prefix_cache \
+                or self.backend.page_size is None or beta.pos <= 0 \
+                or beta.shared_pages:
+            return 0
+        self.prefix_lookups += 1
+        h = self.backend.claim_prefix(beta, beta.pos)
+        if h <= 0:
+            return 0
+        beta.shared_pages = h // self.backend.page_size
+        self.prefix_hits += 1
+        self.prefix_handoff_saved_tokens += h
+        return h
 
     # ---------------- admission control ----------------
     _queued_view = staticmethod(queued_view)
@@ -740,7 +858,9 @@ class ServeSession:
             M = max(1, self.cost.max_prefill_tokens(slo, min(dnum, 8),
                                                     avg_ctx))
             per_pass = self.cost.mixed_batch_latency(M, 0, dnum, avg_ctx)
-            n_pass = math.ceil((queued_pf + r.P) / M)
+            # a cached prefix collapses the newcomer's effective prefill
+            p_eff = max(0, r.P - self.backend.cached_prefix(inst.iid, r))
+            n_pass = math.ceil((queued_pf + p_eff) / M)
             best = min(best, n_pass * per_pass)
         return best
 
@@ -758,26 +878,33 @@ class ServeSession:
 
     def _kv_committed_pages(self, inst: InstanceState) -> int:
         """Pages the instance's placed micro-requests will eventually
-        occupy (each micro grows to its span end).  Computed from the
-        session's own queues, so the number — and every admission
-        decision built on it — is byte-identical on the simulator and
-        on real engines regardless of clock semantics."""
+        occupy (each micro grows to its span end).  Pages borrowed from
+        the shared-prefix cache are counted ONCE — each micro's
+        commitment excludes its claimed pages and the distinct pinned
+        set is added back.  Computed from the session's own queues +
+        the backend's trie (identical on both substrates), so every
+        admission decision built on it is byte-identical on the
+        simulator and on real engines regardless of clock semantics."""
         psize = self.backend.page_size
-        return sum(pages_for(m.mr.end, psize)
+        base = sum(pages_for(m.mr.end, psize) - m.shared_pages
                    for m in inst.prefill_q + inst.decode_q)
+        return base + self.backend.pinned_prefix_pages(inst.iid)
 
     def _kv_admit(self, r: Request) -> bool:
         """Page-pool admission: shed the request when no instance can
         commit enough pages for its predicted footprint (prompt +
-        predicted decode, rounded up to pages)."""
+        predicted decode, rounded up to pages; pages the instance
+        already caches for this prompt's prefix don't count — they
+        would be claimed, not allocated)."""
         psize = self.backend.page_size
         if not psize:
             return True
         need = pages_for(r.P + r.D_pred, psize)
         for inst in (self.active_instances() or self.pool_instances()):
             total = self.backend.total_pages(inst.iid)
+            hit = self.backend.cached_prefix(inst.iid, r) // psize
             if total is None or \
-                    total - self._kv_committed_pages(inst) >= need:
+                    total - self._kv_committed_pages(inst) >= need - hit:
                 return True
         return False
 
@@ -849,6 +976,10 @@ class ServeSession:
             if (self.backend.emits_tokens and sm.decode_remaining > 0
                     and sm.mr.end >= r.true_L):
                 sm.decode_remaining -= 1
+            # shared-prefix hit: splice cached pages, skip their prefill
+            # (betas waiting on a handoff claim later, in release_beta)
+            if sm.ready != float("inf"):
+                self._claim_prefix(sm)
             if sm.prefill_remaining > 0:
                 inst.prefill_q.append(sm)
             elif sm.decode_remaining > 0:
@@ -870,6 +1001,20 @@ class ServeSession:
             deadline = arrival + slo.ttft
         return tbt, deadline
 
+    def _late_cached(self, inst: InstanceState, m: MicroState) -> int:
+        """Late prefix-cache probe for a still-unstarted queued micro: a
+        request that queued behind a sibling sharing its prefix hits
+        pages inserted AFTER it arrived.  Returns the cached head the
+        local scheduler may grant budget-free; the claim itself is
+        applied at batch issue (``_maybe_start_batch``)."""
+        psize = self.backend.page_size
+        if not self.backend.has_prefix_cache or not psize \
+                or m.pos != 0 or m.shared_pages or m.prefill_remaining <= 1:
+            return 0
+        c = self.backend.cached_prefix(inst.iid, m.mr.parent)
+        # mirror _claim_prefix's clamp: >= 1 prefill token always runs
+        return min(c, ((m.prefill_remaining - 1) // psize) * psize)
+
     def _compose_batch(self, inst: InstanceState):
         pf = [m for m in inst.prefill_q if m.ready <= self.now]
         dc = [m for m in inst.decode_q if m.ready <= self.now]
@@ -883,7 +1028,9 @@ class ServeSession:
             tbt, deadline = self._work_meta(m)
             rem = m.prefill_remaining if cap is None else \
                 min(m.prefill_remaining, cap)
-            pworks.append(PrefillWork(m.rid, rem, m.pos, deadline=deadline))
+            cached = min(self._late_cached(inst, m), rem)
+            pworks.append(PrefillWork(m.rid, rem, m.pos, deadline=deadline,
+                                      cached=cached))
         for m in dc:
             tbt, _ = self._work_meta(m)
             dworks.append(DecodeWork(m.rid, m.pos, tbt=tbt))
@@ -911,9 +1058,14 @@ class ServeSession:
             # a decode-only instance (disaggregation baseline) can never
             # run the victim's recompute prefill — eviction would strand it
             return False
+        psize = self.backend.page_size or 1
         candidates = [m for q in (inst.decode_q, inst.prefill_q) for m in q
                       if m not in inst.in_flight and not m.cancelled
-                      and m.ready != float("inf") and m.pos > 0]
+                      and m.ready != float("inf")
+                      # only victims holding *private* pages: evicting a
+                      # micro that lives entirely on shared prefix pages
+                      # frees nothing (and would seesaw forever)
+                      and m.pos > m.shared_pages * psize]
         if junior_to is not None:
             candidates = [m for m in candidates
                           if self._seniority(m) > junior_to]
@@ -927,20 +1079,31 @@ class ServeSession:
             if not older:
                 return False
         self.backend.on_preempt(victim)
+        victim.shared_pages = 0      # preemption dropped its claim too
         self._requeue_for_recompute(inst, victim)
         self.preemptions += 1
         self.pool_events.append((self.now, f"preempt {victim.rid}"))
         return True
 
-    @staticmethod
-    def _requeue_for_recompute(inst: InstanceState, m: MicroState) -> None:
+    def _requeue_for_recompute(self, inst: InstanceState,
+                               m: MicroState) -> None:
         """Turn a micro's resident prefix into prefill work again: it
-        rebuilds KV from position 0 under the normal page budget."""
+        rebuilds KV under the normal page budget.  Pages still claimed
+        from the prefix cache survive (they were never dropped), and a
+        fresh claim is probed — a preempted request whose prefix stayed
+        cached (pinned by a sibling, say) recomputes only the tail."""
+        keep = m.shared_pages * (self.backend.page_size or 0)
         if m in inst.decode_q:
             inst.decode_q.remove(m)
             inst.prefill_q.append(m)
-        m.prefill_remaining += m.pos             # recompute [0, pos)
-        m.pos = 0
+        m.prefill_remaining += m.pos - keep      # recompute [keep, pos)
+        m.pos = keep
+        if m.pos == 0:
+            self._claim_prefix(m)
+        if m.prefill_remaining <= 0 and m.decode_remaining > 0 \
+                and m in inst.prefill_q:
+            inst.prefill_q.remove(m)
+            inst.decode_q.append(m)
 
     def _maybe_start_batch(self, inst: InstanceState) -> None:
         if inst.busy or inst.retired or not inst.has_work(self.now):
@@ -956,10 +1119,21 @@ class ServeSession:
             plan, pf, dc = self._compose_batch(inst)
         if not plan.decodes and not plan.prefills:
             return
-        # map back to MicroState
+        # map back to MicroState; apply late prefix-cache claims now —
+        # the scheduler granted the cached head budget-free, the claim
+        # splices the pages and advances pos, and only the computed
+        # tail enters the executed grant
         by_rid = {m.rid: m for m in pf + dc}
-        grants = [(by_rid[w.rid], g) for w, g in plan.prefills]
+        grants = []
+        for w, g in plan.prefills:
+            m = by_rid[w.rid]
+            if w.cached > 0 and m.pos == 0 and not m.shared_pages:
+                g -= self._claim_prefix(m, limit=w.cached, count=False)
+            if g > 0:
+                grants.append((m, g))
         decs = [by_rid[w.rid] for w in plan.decodes]
+        if not grants and not decs:
+            return
         inst.in_flight = {m for m, _ in grants} | set(decs)
         for m in inst.in_flight:
             m.mr.parent.to(
@@ -992,6 +1166,7 @@ class ServeSession:
             if m.cancelled:
                 self._reap_cancelled(inst, m)
                 continue
+            self.prefill_tokens_computed += g
             m.prefill_remaining -= g
             m.pos += g
             if m.prefill_remaining <= 0:
@@ -1081,6 +1256,18 @@ class ServeSession:
             # alpha's final pass): nothing to hand off or run
             return
         beta.mr.parent.to(RequestState.HANDOFF, self.now)
+        # ---- prefix-cache hit on the DESTINATION ----
+        # pages the beta's instance already caches for this prompt are
+        # claimed into its slot and never cross the link; the modeled
+        # (virtual-clock) transfer shrinks pro rata, a real backend
+        # simply exports fewer pages below.
+        psize = self.backend.page_size
+        skipped = self._claim_handoff_prefix(beta)
+        if skipped > 0 and self.backend.virtual_clock and beta.pos > 0:
+            scale = max(0.0, (beta.pos - skipped) / beta.pos)
+            exposed *= scale
+            nbytes *= scale
+            ready = min(ready, self.now + exposed)
         # ---- page-budget the transfer ----
         # Importing the prefix makes ceil(pos/page) pages resident at
         # once; an unbudgeted import would overflow the destination pool
@@ -1089,10 +1276,9 @@ class ServeSession:
         # back to *recompute*: the beta rebuilds its prefix from
         # position 0 under the scheduler's normal page budget and no
         # state ships at all.
-        psize = self.backend.page_size
         if psize and beta.pos > 0:
             inst = self.instances[beta.iid]
-            need = pages_for(beta.pos, psize)
+            need = pages_for(beta.pos, psize) - beta.shared_pages
             guard = self._seniority(beta)
             free = self.backend.free_pages(beta.iid)
             while (free is not None and free < need
@@ -1107,6 +1293,8 @@ class ServeSession:
                     (self.now, f"handoff-recompute {beta.rid}"))
                 self._push(self.now, "kick", beta.iid)
                 return
+        if self.backend.virtual_clock and beta.pos > 0:
+            self.backend.on_handoff_import(beta)
         if src is not None and not self.backend.virtual_clock:
             t0 = _time.monotonic()
             nbytes = self.backend.do_handoff(src, beta)
@@ -1212,4 +1400,10 @@ class ServeSession:
             rejected=n_rej,
             cancelled=n_can,
             per_class=per_class,
+            prefix_lookups=self.prefix_lookups,
+            prefix_hits=self.prefix_hits,
+            prefix_saved_tokens=self.prefix_saved_tokens,
+            prefix_handoff_saved_tokens=self.prefix_handoff_saved_tokens,
+            prefix_evictions=self.backend.prefix_evictions,
+            prefill_tokens_computed=self.prefill_tokens_computed,
         )

@@ -201,6 +201,146 @@ SHIFTING_TRACES = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Shared-prefix traces (prefix-cache scenarios)
+#
+# These generators attach REAL prompt token ids (``Request.prompt_tokens``)
+# because prefix reuse is a property of token *content*, not lengths:
+#   * multiturn — conversations re-sending the growing history each turn
+#   * system_prompt — a few long system prompts shared across requests
+#   * agentic — agent loops re-prompting with an accumulating scratchpad
+# Token ids are synthetic (uniform over ``vocab``) but *stable*: the same
+# history bytes recur verbatim, which is all the radix trie keys on.
+# ---------------------------------------------------------------------------
+def _toks(rng: np.random.Generator, n: int, vocab: int) -> np.ndarray:
+    return rng.integers(0, vocab, int(max(1, n))).astype(np.int32)
+
+
+def multiturn_trace(qps: float, duration: float, seed: int = 0,
+                    turns: int = 4, user_len: int = 48,
+                    response_len: int = 64, think_time: float = 2.0,
+                    vocab: int = 32000,
+                    predict_sigma: Optional[float] = None,
+                    slo_mix: Optional[Dict[str, float]] = None
+                    ) -> List[Request]:
+    """Multi-turn conversations with growing histories.
+
+    Conversations *start* as a Poisson process at ``qps``; each turn's
+    prompt is the full scripted history (all previous prompts and
+    responses) plus a fresh user message, and the next turn arrives an
+    exponential ``think_time`` after the previous response would have
+    finished streaming.  Turn ``k`` therefore shares turn ``k-1``'s
+    whole prompt as a prefix — the canonical chat-serving reuse
+    pattern.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, int(qps * duration * 2) + 16)
+    starts = np.cumsum(gaps)
+    starts = starts[starts < duration]
+    reqs: List[Request] = []
+    for c, t0 in enumerate(starts):
+        history = _toks(rng, user_len, vocab)
+        t = float(t0)
+        for k in range(turns):
+            d = int(max(4, rng.lognormal(np.log(response_len), 0.3)))
+            reqs.append(_tok_req(f"conv{seed}-{c}-t{k}", t, history, d,
+                                 rng, predict_sigma, slo_mix))
+            if k + 1 == turns:
+                break
+            response = _toks(rng, d, vocab)
+            user = _toks(rng, user_len, vocab)
+            history = np.concatenate([history, response, user])
+            t += rng.exponential(think_time)
+            if t >= duration * 2:       # runaway tail guard
+                break
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+def system_prompt_trace(qps: float, duration: float, seed: int = 0,
+                        n_system: int = 4, system_len: int = 512,
+                        user_len: int = 96, d_mode: int = 96,
+                        vocab: int = 32000,
+                        predict_sigma: Optional[float] = None,
+                        slo_mix: Optional[Dict[str, float]] = None
+                        ) -> List[Request]:
+    """A mixture over ``n_system`` long shared system prompts: every
+    request is one of the system prompts plus a unique user suffix, so
+    the cacheable prefix is exactly the system prompt (skewed toward
+    the first prompts, Zipf-ish, like a real deployment's default
+    assistant)."""
+    rng = np.random.default_rng(seed)
+    systems = [_toks(rng, system_len, vocab) for _ in range(n_system)]
+    weights = 1.0 / np.arange(1, n_system + 1)
+    weights /= weights.sum()
+    gaps = rng.exponential(1.0 / qps, int(qps * duration * 2) + 16)
+    arrivals = np.cumsum(gaps)
+    arrivals = arrivals[arrivals < duration]
+    reqs: List[Request] = []
+    for i, t in enumerate(arrivals):
+        s = int(rng.choice(n_system, p=weights))
+        prompt = np.concatenate([systems[s], _toks(rng, user_len, vocab)])
+        d = int(max(4, rng.lognormal(np.log(d_mode), 0.4)))
+        reqs.append(_tok_req(f"sys{seed}-{i}", float(t), prompt, d, rng,
+                             predict_sigma, slo_mix))
+    return reqs
+
+
+def agentic_trace(qps: float, duration: float, seed: int = 0,
+                  loops: int = 5, base_len: int = 256,
+                  tool_len: int = 80, action_len: int = 32,
+                  gap_time: float = 0.5, vocab: int = 32000,
+                  predict_sigma: Optional[float] = None,
+                  slo_mix: Optional[Dict[str, float]] = None
+                  ) -> List[Request]:
+    """Agent re-prompt loops: each agent starts from a base prompt and
+    re-sends it with an accumulating scratchpad (tool outputs appended
+    between iterations), so every iteration's prompt extends the
+    previous one — short decode, near-total prefix overlap."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, int(qps * duration * 2) + 16)
+    starts = np.cumsum(gaps)
+    starts = starts[starts < duration]
+    reqs: List[Request] = []
+    for a, t0 in enumerate(starts):
+        pad = _toks(rng, base_len, vocab)
+        t = float(t0)
+        for k in range(loops):
+            d = int(max(4, rng.lognormal(np.log(action_len), 0.3)))
+            reqs.append(_tok_req(f"agent{seed}-{a}-i{k}", t, pad, d, rng,
+                                 predict_sigma, slo_mix))
+            if k + 1 == loops:
+                break
+            pad = np.concatenate([pad, _toks(rng, tool_len, vocab)])
+            t += rng.exponential(gap_time)
+    reqs.sort(key=lambda r: r.arrival)
+    return reqs
+
+
+SHARED_PREFIX_TRACES = {
+    "multiturn": multiturn_trace,
+    "system_prompt": system_prompt_trace,
+    "agentic": agentic_trace,
+}
+
+
+def shared_prefix_trace(kind: str, qps: float, duration: float,
+                        seed: int = 0, **kw) -> List[Request]:
+    """Dispatch into the shared-prefix family (``SHARED_PREFIX_TRACES``)."""
+    if kind not in SHARED_PREFIX_TRACES:
+        raise ValueError(f"unknown shared-prefix trace {kind!r}; "
+                         f"one of {sorted(SHARED_PREFIX_TRACES)}")
+    return SHARED_PREFIX_TRACES[kind](qps, duration, seed, **kw)
+
+
+def _tok_req(rid: str, t: float, prompt: np.ndarray, d: int,
+             rng: np.random.Generator, predict_sigma: Optional[float],
+             slo_mix: Optional[Dict[str, float]]) -> Request:
+    r = _req(rid, t, len(prompt), d, rng, predict_sigma, slo_mix)
+    r.prompt_tokens = prompt
+    return r
+
+
 def shifting_trace(kind: str, qps: float, duration: float, seed: int = 0,
                    **kw) -> List[Request]:
     """Dispatch into the shifting-trace family (see ``SHIFTING_TRACES``)."""

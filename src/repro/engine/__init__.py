@@ -1,5 +1,6 @@
 from repro.engine.block_allocator import (  # noqa: F401
     BlockAllocator, CapacityError, OutOfPages,
 )
+from repro.engine.prefix_cache import PrefixCache  # noqa: F401
 from repro.engine.runner import InstanceEngine, BatchItem  # noqa: F401
 from repro.engine.backend import EngineBackend  # noqa: F401

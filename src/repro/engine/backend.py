@@ -63,7 +63,8 @@ class EngineBackend(Backend):
                  transfer_chunk: int = 32, seed: int = 0,
                  kv_mode: str = "auto", page_size: int = 8,
                  n_pages: Optional[int] = None,
-                 max_chunk: int = DEFAULT_MAX_CHUNK):
+                 max_chunk: int = DEFAULT_MAX_CHUNK,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -73,6 +74,10 @@ class EngineBackend(Backend):
         self.kv_mode = kv_mode
         self.paged = (kv_mode == "paged" or
                       (kv_mode == "auto" and supports_paged_kv(cfg)))
+        if prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires a paged KV mode")
+        self.prefix_cache = prefix_cache
+        self.has_prefix_cache = prefix_cache
         self.page_size = page_size if self.paged else None
         self.n_pages = (n_pages if n_pages is not None
                         else n_slots * pages_for(max_len, page_size)) \
@@ -91,7 +96,7 @@ class EngineBackend(Backend):
                 self.cfg, self.params, self.n_slots, self.max_len,
                 kv_mode=self.kv_mode,
                 page_size=self.page_size or 8, n_pages=self.n_pages,
-                max_chunk=self.max_chunk)
+                max_chunk=self.max_chunk, prefix_cache=self.prefix_cache)
             # the engine owns the auto-mode rule; the backend's page
             # bookkeeping (register/admission/total_pages) must agree
             assert eng.paged == self.paged, \
@@ -114,6 +119,10 @@ class EngineBackend(Backend):
     def register(self, req: Request, prompt=None) -> None:
         if req.rid in self.records:
             return
+        if prompt is None and req.prompt_tokens is not None:
+            # shared-prefix traces carry real token ids (folded into the
+            # model's vocab id-stably, so shared prefixes stay shared)
+            prompt = np.asarray(req.prompt_tokens) % self.cfg.vocab_size
         if prompt is None:
             # trace replay supplies lengths only: synthesize the prompt
             prompt = self._rng.integers(0, self.cfg.vocab_size, req.P)
@@ -149,7 +158,46 @@ class EngineBackend(Backend):
         if loc is not None:
             eng = self.engines.get(loc[0])
             if eng is not None:
+                rec = self.records.get(micro.mr.parent.rid)
+                if rec is not None:
+                    # index the resident *prompt* pages before the slot
+                    # frees them — the shared-prefix cache keys on
+                    # client-sent tokens only, so the simulator (which
+                    # never sees sampled tokens) indexes identically
+                    eng.remember(loc[1], rec.prompt)
                 eng.free(loc[1])
+
+    # ---------------- shared-prefix cache ----------------
+    def cached_prefix(self, iid: int, req: Request) -> int:
+        eng = self.engines.get(iid)
+        rec = self.records.get(req.rid)
+        if eng is None or rec is None:
+            return 0
+        return eng.lookup_prefix(rec.prompt)
+
+    def claim_prefix(self, micro: MicroState, limit: int) -> int:
+        loc = self._slots.get(micro.rid)
+        if loc is None:
+            return 0
+        eng = self.engines.get(loc[0])
+        rec = self.records.get(micro.mr.parent.rid)
+        if eng is None or rec is None:
+            return 0
+        return eng.register(loc[1], rec.prompt, max_tokens=limit)
+
+    def pinned_prefix_pages(self, iid: int) -> int:
+        eng = self.engines.get(iid)
+        return eng.prefix.pinned_pages if eng is not None and eng.prefix \
+            else 0
+
+    @property
+    def prefix_evictions(self) -> int:
+        return sum(e.prefix.evictions for e in self.engines.values()
+                   if e.prefix is not None)
+
+    def check_invariants(self) -> None:
+        for eng in self.engines.values():
+            eng.check_invariants()
 
     def on_preempt(self, micro: MicroState) -> None:
         """Memory-pressure preemption: drop the micro's KV pages (the
@@ -200,25 +248,34 @@ class EngineBackend(Backend):
         return ExecResult(latency=latency, tokens=tokens, deferred=False)
 
     # ---------------- KV/state movement ----------------
-    def _transfer_bytes(self, eng: InstanceEngine, upto: int) -> int:
-        """Bytes a handoff of ``upto`` tokens actually puts on the wire:
-        paged engines ship whole pages (state_bytes counts the padding),
-        dense engines move exactly the analytic amount."""
+    def _transfer_bytes(self, eng: InstanceEngine, upto: int,
+                        start: int = 0) -> int:
+        """Bytes a handoff of tokens ``[start, upto)`` actually puts on
+        the wire: paged engines ship whole pages (state_bytes counts the
+        padding), dense engines move exactly the analytic amount."""
         if eng.paged:
-            return int(eng.state_bytes(upto))
+            return int(eng.state_bytes(upto, start=start))
         return int(self.cost.kv_transfer_bytes(upto))
 
     def do_handoff(self, src: MicroState, dst: MicroState) -> float:
         """Chunk-wise KV/state handoff from the finished alpha to its
-        beta (paper §4.3), on actual cache arrays."""
+        beta (paper §4.3), on actual cache arrays.  When the session
+        claimed a cached prefix on the destination (the beta's block
+        table already covers it), only the missed tail ships."""
         si, ss = self._slots[src.rid]
         di, ds = self._slots[dst.rid]
         src_eng = self.engines[si]
+        dst_eng = self.engines[di]
+        start = 0
+        if src_eng.paged and dst_eng.allocator is not None:
+            start = min(dst_eng.allocator.len_of(ds), src.pos)
+            start -= start % src_eng.page_size
         pieces = src_eng.export_state(ss, upto=src.pos,
-                                      chunk=self.transfer_chunk)
-        self.engines[di].import_state(ds, pieces)
+                                      chunk=self.transfer_chunk,
+                                      start=start)
+        dst_eng.import_state(ds, pieces)
         dst.pos = src.pos
-        nbytes = self._transfer_bytes(src_eng, src.pos)
+        nbytes = self._transfer_bytes(src_eng, src.pos, start=start)
         self.kv_bytes_moved += nbytes
         return float(nbytes)
 

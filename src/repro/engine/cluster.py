@@ -50,10 +50,12 @@ class ServingCluster:
                  prefill_budget: int = 64, transfer_chunk: int = 32,
                  split: bool = True, hw: HardwareSpec = A100,
                  slo: float = 0.100, admission: bool = False,
-                 default_slo: Optional[SLOClass] = None):
+                 default_slo: Optional[SLOClass] = None,
+                 prefix_cache: bool = False):
         from repro.sim.policies import ColocationPolicy, DynaServePolicy
         self.backend = EngineBackend(cfg, params, n_slots, max_len, hw,
-                                     transfer_chunk)
+                                     transfer_chunk,
+                                     prefix_cache=prefix_cache)
         if split:
             self.policy = DynaServePolicy(self.backend.cost, slo,
                                           transfer_chunk=transfer_chunk)

@@ -23,6 +23,7 @@ import numpy as np
 from repro.engine.block_allocator import (
     BlockAllocator, CapacityError, OutOfPages, pages_for,
 )
+from repro.engine.prefix_cache import PrefixCache
 from repro.models.config import ModelConfig
 from repro.models.model import (
     forward, init_cache, init_paged_cache, supports_paged_kv,
@@ -83,7 +84,8 @@ class InstanceEngine:
                  max_len: int = 512, window_override: Optional[int] = None,
                  kv_mode: str = "auto", page_size: int = 8,
                  n_pages: Optional[int] = None,
-                 max_chunk: int = DEFAULT_MAX_CHUNK):
+                 max_chunk: int = DEFAULT_MAX_CHUNK,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -109,17 +111,28 @@ class InstanceEngine:
             self.allocator = BlockAllocator(self.n_pages, page_size, n_slots)
             self.page_buckets = bucket_ladder(self.n_pages)
         else:
+            if prefix_cache:
+                raise ValueError("the shared-prefix cache lives on the "
+                                 "page pool; it requires a paged KV mode")
             self.page_size = None
             self.n_pages = None
             self.allocator = None
             self.cache = init_cache(cfg, n_slots, max_len,
                                     window_override=window_override)
+        # shared-prefix KV cache: trie over the page pool + per-slot
+        # claims; the allocator evicts through it under pressure
+        self.prefix: Optional[PrefixCache] = None
+        self._claims: Dict[int, object] = {}
+        if prefix_cache:
+            self.prefix = PrefixCache(self.page_size)
+            self.allocator.evictor = self._evict_cached_page
         self.free_slots = list(range(n_slots))
         self.slot_owner: Dict[int, str] = {}
         self._step_fns: Dict[tuple, callable] = {}
         # counters for tests/benchmarks
         self.iterations = 0
         self.tokens_processed = 0
+        self.prefix_hit_tokens = 0
 
     # ---------------- slot management ----------------
     def alloc(self, req_id: str) -> int:
@@ -133,6 +146,7 @@ class InstanceEngine:
     def free(self, slot: int) -> None:
         self.slot_owner.pop(slot, None)
         if self.allocator is not None:
+            self._drop_claim(slot)
             self.allocator.free_slot(slot)
         self.free_slots.append(slot)
 
@@ -140,6 +154,7 @@ class InstanceEngine:
         """Release the slot's KV pages but keep the slot: the scheduler
         re-queues the request for recompute under memory pressure."""
         if self.allocator is not None:
+            self._drop_claim(slot)
             self.allocator.trim(slot)
 
     @property
@@ -148,11 +163,75 @@ class InstanceEngine:
 
     @property
     def free_pages(self) -> Optional[int]:
-        return self.allocator.free_pages if self.allocator else None
+        """Free pages *including* what the prefix cache would give back
+        under pressure (unpinned cached prefixes are evicted before any
+        request is preempted, so the schedulers may budget against
+        them)."""
+        if self.allocator is None:
+            return None
+        extra = self.prefix.evictable_pages if self.prefix else 0
+        return self.allocator.free_pages + extra
 
     @property
     def mem_pressure(self) -> float:
-        return self.allocator.pressure if self.allocator else 0.0
+        if self.allocator is None:
+            return 0.0
+        return 1.0 - self.free_pages / self.n_pages
+
+    # ---------------- shared-prefix cache ----------------
+    def _evict_cached_page(self) -> Optional[int]:
+        return self.prefix.evict_one() if self.prefix else None
+
+    def _drop_claim(self, slot: int) -> None:
+        claim = self._claims.pop(slot, None)
+        if claim is not None:
+            self.prefix.release(claim)
+
+    def register(self, slot: int, tokens,
+                 max_tokens: Optional[int] = None) -> int:
+        """Match the longest cached prefix of ``tokens`` (page-aligned,
+        capped to ``max_tokens``) and splice its pages into the slot's
+        block table, pinning them for the slot's lifetime.  Returns the
+        number of prefix tokens whose prefill is thereby skipped (0 on
+        a miss or with the cache disabled)."""
+        if self.prefix is None or self.allocator.len_of(slot) > 0:
+            return 0
+        claim = self.prefix.claim(tokens, max_tokens=max_tokens)
+        if not claim.nodes:
+            return 0
+        self.allocator.splice(slot, claim.pages, claim.tokens)
+        self._claims[slot] = claim
+        self.prefix_hit_tokens += claim.tokens
+        return claim.tokens
+
+    def lookup_prefix(self, tokens) -> int:
+        """Non-mutating probe: cached prefix length in tokens (the
+        global scheduler scores placements with it)."""
+        return self.prefix.match_len(tokens) if self.prefix else 0
+
+    def remember(self, slot: int, tokens) -> int:
+        """Index the slot's resident full pages under their token ids so
+        later requests sharing the prefix can splice them (called as the
+        slot's request leaves the engine, *before* ``free``).  Newly
+        adopted pages gain a cache reference and survive the slot;
+        chunks already cached keep their existing page (the slot's
+        duplicate is freed normally).  Returns pages adopted."""
+        if self.prefix is None:
+            return 0
+        page = self.page_size
+        n = (min(len(tokens), self.allocator.len_of(slot)) // page) * page
+        if n <= 0:
+            return 0
+        adopted = self.prefix.insert(tokens[:n], self.allocator.pages_of(slot))
+        self.allocator.retain(adopted)
+        return len(adopted)
+
+    def check_invariants(self) -> None:
+        """Refcount coherence (debug): allocator refs == table refs +
+        prefix-cache refs for every page."""
+        if self.allocator is not None:
+            refs = self.prefix.page_refcounts() if self.prefix else {}
+            self.allocator.check(cache_refs=refs)
 
     # ---------------- jitted unified step ----------------
     def _step_fn(self, T: int, n_pp: int = 0):
@@ -204,10 +283,15 @@ class InstanceEngine:
         n_pp = 0
         if self.paged:
             # grow block tables to cover every item's span before the
-            # write; OutOfPages here means the scheduler overcommitted
+            # write; OutOfPages here means the scheduler overcommitted.
+            # Growing may copy-on-write-fork shared prefix pages the
+            # write region touches — apply the KV copies first.
+            forks: List[Tuple[int, int]] = []
             for it in items:
-                self.allocator.ensure(it.slot,
-                                      it.pos_offset + len(it.tokens))
+                forks.extend(self.allocator.ensure(
+                    it.slot, it.pos_offset + len(it.tokens)))
+            if forks:
+                self._apply_forks(forks)
             n_pp = bucket_of(max(1, self.allocator.max_table_len),
                              self.page_buckets)
             args = (jnp.asarray(self.allocator.table_array(n_pp)),)
@@ -220,6 +304,22 @@ class InstanceEngine:
         self.tokens_processed += int(sum(len(it.tokens) for it in items))
         logits = np.asarray(logits)
         return {it.slot: logits[it.slot] for it in items if it.want_logits}
+
+    def _apply_forks(self, forks: Sequence[Tuple[int, int]]) -> None:
+        """Copy KV contents of copy-on-write-forked pages (old -> new)
+        in one scatter per layer so the forking slot may write its
+        private copy without touching the shared original."""
+        old_ids = jnp.asarray([o for o, _ in forks], jnp.int32)
+        new_ids = jnp.asarray([n for _, n in forks], jnp.int32)
+        blocks = list(self.cache["blocks"])
+        for i in range(len(blocks)):
+            blocks[i] = {
+                "k_pages": blocks[i]["k_pages"].at[:, new_ids].set(
+                    blocks[i]["k_pages"][:, old_ids]),
+                "v_pages": blocks[i]["v_pages"].at[:, new_ids].set(
+                    blocks[i]["v_pages"][:, old_ids]),
+            }
+        self.cache = dict(self.cache, blocks=tuple(blocks))
 
     def run_frontend(self, slot: int, *, extra_embeds=None, frames=None,
                      tokens: Optional[np.ndarray] = None, pos_offset: int = 0):
@@ -264,16 +364,24 @@ class InstanceEngine:
         return np.asarray(logits[slot, 0])
 
     # ---------------- micro-request state handoff ----------------
-    def export_state(self, slot: int, upto: int, chunk: int = 0) -> List[dict]:
+    def export_state(self, slot: int, upto: int, chunk: int = 0,
+                     start: int = 0) -> List[dict]:
         """Extract the KV/state needed to resume this request elsewhere.
 
-        Attention KV for positions [0, upto) is split into ``chunk``-sized
-        pieces (chunk-based KV transfer, §4.3); recurrent state is O(1) and
-        ships as a single piece.  Paged engines ship whole pages, so the
-        chunk boundaries of the transfer align with page boundaries.
+        Attention KV for positions [start, upto) is split into
+        ``chunk``-sized pieces (chunk-based KV transfer, §4.3);
+        recurrent state is O(1) and ships as a single piece.  Paged
+        engines ship whole pages, so the chunk boundaries of the
+        transfer align with page boundaries.  A non-zero ``start``
+        (page-aligned) skips the leading prefix the destination already
+        holds — the prefix-cache-aware handoff ships only the pages the
+        destination's cache missed.
         """
         if self.paged:
-            return self._export_paged(slot, upto, chunk)
+            return self._export_paged(slot, upto, chunk, start=start)
+        if start:
+            raise ValueError("prefix-skipping export requires a paged "
+                             "cache")
         cfg = self.cfg
         pieces: List[dict] = []
         spans = ([(0, upto)] if not chunk else
@@ -320,20 +428,26 @@ class InstanceEngine:
                               for k, v in self.cache["cross"].items()}
         return pieces
 
-    def _export_paged(self, slot: int, upto: int, chunk: int = 0) -> List[dict]:
+    def _export_paged(self, slot: int, upto: int, chunk: int = 0,
+                      start: int = 0) -> List[dict]:
         """Page-granular export: whole physical pages, grouped into
         pieces of ``ceil(chunk / page_size)`` pages each (the transfer
-        chunk is rounded *up* to page boundaries)."""
+        chunk is rounded *up* to page boundaries).  ``start`` (a page
+        boundary) drops the leading pages from the export."""
         page = self.page_size
+        if start % page:
+            raise ValueError(f"export start {start} is not page-aligned")
         table = self.allocator.pages_of(slot)
         n_need = pages_for(upto, page)
         if n_need > len(table):
             raise OutOfPages(
                 f"slot {slot}: export of {upto} tokens needs {n_need} "
                 f"pages, table holds {len(table)}")
+        if start >= upto:
+            return []
         per_piece = pages_for(chunk, page) if chunk else max(1, n_need)
         pieces: List[dict] = []
-        for p0 in range(0, max(1, n_need), per_piece):
+        for p0 in range(start // page, max(1, n_need), per_piece):
             p1 = min(p0 + per_piece, n_need)
             ids = np.asarray(table[p0:p1], np.int32)
             piece = {"span": (p0 * page, min(p1 * page, upto)),
@@ -445,15 +559,20 @@ class InstanceEngine:
                     for k, v in piece["cross"].items()})
         self.cache = cache
 
-    def state_bytes(self, upto: int) -> int:
-        """Bytes a handoff of ``upto`` tokens moves (for transfer modeling).
-        Paged engines ship whole pages, so the attention term is rounded
-        up to the page size (the padding is real wire traffic)."""
+    def state_bytes(self, upto: int, start: int = 0) -> int:
+        """Bytes a handoff of tokens ``[start, upto)`` moves (for
+        transfer modeling; ``start > 0`` is the prefix the destination's
+        cache already holds).  Paged engines ship whole pages, so the
+        attention term is rounded up to the page size (the padding is
+        real wire traffic)."""
         cfg = self.cfg
         total = 0
         per_tok = 2 * cfg.n_kv_heads * cfg.hd * jnp.dtype(cfg.dtype).itemsize
-        upto_attn = (pages_for(upto, self.page_size) * self.page_size
-                     if self.paged else upto)
+        if self.paged:
+            upto_attn = (pages_for(upto, self.page_size)
+                         - start // self.page_size) * self.page_size
+        else:
+            upto_attn = upto - start
         for kind in (list(cfg.layer_pattern) * cfg.n_groups)[: cfg.n_layers]:
             if kind == "attn":
                 total += upto_attn * per_tok

@@ -64,6 +64,13 @@ def report(m: SessionMetrics, label: str) -> None:
           f"rejected={m.rejected} cancelled={m.cancelled} "
           f"duration={m.duration:.2f}s goodput={m.goodput:.1f} tok/s "
           f"p99_tbt={m.p99_tbt()*1e3:.1f}ms")
+    if m.prefix_lookups:
+        print(f"prefix-cache: hit_rate={m.prefix_hit_rate:.2f} "
+              f"({m.prefix_hits}/{m.prefix_lookups}) "
+              f"saved_prefill={m.prefix_saved_tokens} tok "
+              f"saved_handoff={m.prefix_handoff_saved_tokens} tok "
+              f"evictions={m.prefix_evictions} "
+              f"computed_prefill={m.prefill_tokens_computed} tok")
     if m.per_class:
         print(f"{'class':<12} {'offered':>7} {'done':>5} {'rej':>4} "
               f"{'ttft_p50':>9} {'ttft_p99':>9} {'tbt_p99':>8} "
@@ -89,7 +96,8 @@ def serve_engine(args) -> SessionMetrics:
     reqs = mini_trace(args.requests, args.qps, args.seed, mix,
                       p_max=args.prompt_len, d_max=args.max_new)
     backend = EngineBackend(cfg, params, n_slots=max(8, 2 * args.requests),
-                            max_len=args.prompt_len + args.max_new + 32)
+                            max_len=args.prompt_len + args.max_new + 32,
+                            prefix_cache=args.prefix_cache)
     policy = DynaServePolicy(backend.cost, args.slo)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
@@ -109,10 +117,16 @@ def serve_sim(args) -> SessionMetrics:
     from repro.core.elastic import ElasticConfig
     from repro.sim.policies import DynaServePolicy, ElasticDynaServePolicy
 
+    from repro.data.workloads import SHARED_PREFIX_TRACES, shared_prefix_trace
+
     cost = BatchCostModel(get_config(args.arch), A100)
     mix = parse_slo_mix(args.slo_mix)
-    reqs = generate_trace(args.workload, args.qps, args.duration,
-                          seed=args.seed, slo_mix=mix)
+    if args.workload in SHARED_PREFIX_TRACES:
+        reqs = shared_prefix_trace(args.workload, args.qps, args.duration,
+                                   seed=args.seed, slo_mix=mix)
+    else:
+        reqs = generate_trace(args.workload, args.qps, args.duration,
+                              seed=args.seed, slo_mix=mix)
     if args.policy == "elastic":
         policy = ElasticDynaServePolicy(
             cost, args.slo,
@@ -120,7 +134,13 @@ def serve_sim(args) -> SessionMetrics:
                                   max_instances=2 * args.instances))
     else:
         policy = DynaServePolicy(cost, args.slo)
-    session = ServeSession(SimBackend(cost), policy, SessionConfig(
+    if args.prefix_cache:
+        backend = SimBackend(cost, page_size=args.page_size,
+                             pages_per_instance=args.pages_per_instance,
+                             prefix_cache=True)
+    else:
+        backend = SimBackend(cost)
+    session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
         admission=args.admission))
     m = session.run(reqs)
@@ -149,6 +169,14 @@ def main(argv=None):
                     help="class=weight list; empty string = unclassed")
     ap.add_argument("--admission", action="store_true",
                     help="enable TTFT-predicting admission control")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the shared-prefix KV cache (use a "
+                         "shared-prefix --workload to see hits)")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="KV page size for the sim page pool "
+                         "(--prefix-cache on the sim backend)")
+    ap.add_argument("--pages-per-instance", type=int, default=4096,
+                    help="sim page-pool capacity per instance")
     ap.add_argument("--seed", type=int, default=0)
     # engine-backend knobs
     ap.add_argument("--requests", type=int, default=8)

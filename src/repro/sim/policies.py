@@ -138,9 +138,14 @@ class DynaServePolicy(BasePolicy):
         # ablation arm for Fig 11 (no SLO-aware batching)
         return LocalScheduler(cost, slo, slo_aware=False, static_chunk=2048)
 
-    def _views(self, sim) -> List[InstanceView]:
+    def _views(self, sim, r: Optional[Request] = None) -> List[InstanceView]:
+        """Per-instance views for the global scheduler; with ``r`` they
+        carry each instance's cached-prefix length for the request's
+        prompt, so Algorithm 1 scores effective (post-hit) prefill."""
         return [InstanceView(i.iid, self._queued_view(i), i.draining,
-                             i.role_bias)
+                             i.role_bias,
+                             cached_prefix=(sim.backend.cached_prefix(
+                                 i.iid, r) if r is not None else 0))
                 for i in sim.pool_instances()]
 
     def place(self, r: Request, sim, now: float):
@@ -158,7 +163,7 @@ class DynaServePolicy(BasePolicy):
             b = SimMicro(beta, 0, r.D, r.P, ready=float("inf"))
             self._pending_beta[alpha.rid] = b
             return [(ia, a), (ib, b)]
-        pl = self.gs.schedule(r, self._views(sim))
+        pl = self.gs.schedule(r, self._views(sim, r))
         self.last_overhead = pl.overhead_s
         out = []
         # clamp the *executed* token span to the true length (the predictor

@@ -24,12 +24,16 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.costmodel import BatchCostModel, WorkItem
 from repro.core.paging import pages_for
+from repro.core.request import Request
 from repro.core.session import (
     Backend, ExecResult, InstanceState, MicroState, ReqState, ServeHandle,
     ServeSession, SessionConfig, SessionMetrics, SessionStallError,
 )
+from repro.engine.prefix_cache import PrefixCache
 
 # Seed-era names: the runtime state classes moved into the shared driver.
 SimConfig = SessionConfig
@@ -62,7 +66,8 @@ class SimBackend(Backend):
     max_chunk = None
 
     def __init__(self, cost: BatchCostModel, page_size: Optional[int] = None,
-                 pages_per_instance: Optional[int] = None):
+                 pages_per_instance: Optional[int] = None,
+                 prefix_cache: bool = False):
         if bool(page_size) != bool(pages_per_instance):
             raise ValueError(
                 "page_size and pages_per_instance must be set together "
@@ -70,10 +75,72 @@ class SimBackend(Backend):
                 f"pages_per_instance={pages_per_instance}); a half-"
                 "configured pool would silently disable the occupancy "
                 "model the engine enforces")
+        if prefix_cache and not page_size:
+            raise ValueError("prefix_cache models page reuse; it needs "
+                             "page_size + pages_per_instance")
         self.cost = cost
         self.page_size = page_size
         self.pages_per_instance = pages_per_instance
+        self.prefix_cache = prefix_cache
+        self.has_prefix_cache = prefix_cache
         self._placed: Dict[int, Dict[str, MicroState]] = {}
+        # shared-prefix model: the engine's trie, per instance, over the
+        # trace's prompt token ids with *virtual* page ids — identical
+        # insert/match/evict sequences give identical hit decisions
+        self._tries: Dict[int, PrefixCache] = {}
+        self._claims: Dict[str, object] = {}
+
+    # ---------------- pool lifecycle ----------------
+    def spawn(self, iid: int) -> None:
+        if self.prefix_cache and iid not in self._tries:
+            self._tries[iid] = PrefixCache(self.page_size)
+
+    def retire(self, iid: int) -> None:
+        # the engine's cache dies with the engine; model the same
+        self._tries.pop(iid, None)
+
+    # ---------------- shared-prefix model ----------------
+    @staticmethod
+    def _prompt_of(req: Request):
+        return req.prompt_tokens
+
+    def cached_prefix(self, iid: int, req: Request) -> int:
+        trie = self._tries.get(iid)
+        toks = self._prompt_of(req)
+        if trie is None or toks is None:
+            return 0
+        return trie.match_len(toks)
+
+    def claim_prefix(self, micro: MicroState, limit: int) -> int:
+        trie = self._tries.get(micro.iid)
+        toks = self._prompt_of(micro.mr.parent)
+        if trie is None or toks is None:
+            return 0
+        claim = trie.claim(toks, max_tokens=limit)
+        if not claim.nodes:
+            return 0
+        self._claims[micro.rid] = claim
+        return claim.tokens
+
+    def _drop_claim(self, micro: MicroState) -> None:
+        claim = self._claims.pop(micro.rid, None)
+        if claim is not None:
+            trie = self._tries.get(micro.iid)
+            if trie is not None:
+                trie.release(claim)
+
+    def pinned_prefix_pages(self, iid: int) -> int:
+        trie = self._tries.get(iid)
+        return trie.pinned_pages if trie is not None else 0
+
+    @property
+    def prefix_evictions(self) -> int:
+        return sum(t.evictions for t in self._tries.values())
+
+    def check_invariants(self) -> None:
+        for iid, trie in self._tries.items():
+            assert trie.pinned_pages <= trie.n_pages
+            assert trie.pinned_pages >= 0
 
     # ---------------- page-occupancy model ----------------
     def on_place(self, iid: int, micro: MicroState) -> bool:
@@ -83,7 +150,46 @@ class SimBackend(Backend):
 
     def release(self, micro: MicroState) -> None:
         if self.page_size:
+            trie = self._tries.get(micro.iid)
+            toks = self._prompt_of(micro.mr.parent)
+            if trie is not None and toks is not None \
+                    and micro.ready != float("inf"):
+                # index the resident prompt prefix, exactly like the
+                # engine does before freeing the slot (virtual page ids;
+                # the trie *shape* is the cross-substrate contract; a
+                # beta still waiting on its handoff holds no KV)
+                n = min(micro.pos, len(toks))
+                trie.insert(np.asarray(toks)[:n - n % self.page_size])
+            self._drop_claim(micro)
             self._placed.get(micro.iid, {}).pop(micro.rid, None)
+
+    def on_preempt(self, micro: MicroState) -> None:
+        if self.page_size:
+            self._drop_claim(micro)
+
+    def _evict_to_fit(self, iid: int, need: int) -> None:
+        """Shrink the instance's trie until ``need`` new pages fit the
+        physical pool — the sim-side mirror of the engine allocator's
+        ``_reclaim`` running inside an import's ``ensure``, so both
+        tries shed LRU leaves at the same logical events."""
+        trie = self._tries.get(iid)
+        if trie is None:
+            return
+        phys_free = self.pages_per_instance \
+            - self._private_pages(iid) - trie.n_pages
+        while phys_free < need:
+            if trie.evict_one() is None:
+                break
+            phys_free += 1
+
+    def on_handoff_import(self, beta: MicroState) -> None:
+        """The beta's KV import is about to allocate its non-cached
+        pages on the destination; evict cold cache entries first,
+        exactly like the engine's ``_import_paged`` would."""
+        if self.page_size:
+            self._evict_to_fit(
+                beta.iid,
+                pages_for(beta.pos, self.page_size) - beta.shared_pages)
 
     def on_migrate(self, micro: MicroState, src_iid: int,
                    dst_iid: int) -> bool:
@@ -95,15 +201,31 @@ class SimBackend(Backend):
                 free = self.free_pages(dst_iid)
                 if free is not None and free < need:
                     return False
+                # the engine's import would reclaim cache pages on the
+                # destination; shrink the modeled trie the same way
+                self._evict_to_fit(dst_iid, need)
+            # the claim stays behind (engine: the source slot is freed)
+            self._drop_claim(micro)
             self._placed.get(src_iid, {}).pop(micro.rid, None)
             self._placed.setdefault(dst_iid, {})[micro.rid] = micro
         return True
 
-    def _used_pages(self, iid: int) -> int:
+    def _private_pages(self, iid: int) -> int:
         p = self.page_size
-        return sum(pages_for(m.pos, p)
+        return sum(max(0, pages_for(m.pos, p) - m.shared_pages)
                    for m in self._placed.get(iid, {}).values()
                    if m.ready != float("inf") and m.pos > 0)
+
+    def _used_pages(self, iid: int) -> int:
+        """Pages unavailable to new work: privately-held pages plus the
+        *pinned* part of the prefix cache — unpinned cached pages count
+        as free because the engine evicts them on demand, strictly
+        before preempting any request."""
+        used = self._private_pages(iid)
+        trie = self._tries.get(iid)
+        if trie is not None:
+            used += trie.pinned_pages
+        return used
 
     def free_pages(self, iid: int) -> Optional[int]:
         if not self.page_size:
@@ -117,6 +239,21 @@ class SimBackend(Backend):
     def execute(self, inst: InstanceState,
                 grants: Sequence[Tuple[MicroState, int]],
                 decs: Sequence[MicroState]) -> ExecResult:
+        trie = self._tries.get(inst.iid)
+        if trie is not None:
+            # the engine allocates this batch's pages inside run_batch,
+            # evicting LRU cached prefixes when the free list runs dry;
+            # mirror that here so both tries shrink at the same points
+            p = self.page_size
+            growth = sum(pages_for(m.pos + g, p) - pages_for(m.pos, p)
+                         for m, g in grants)
+            growth += sum(1 for m in decs if m.pos % p == 0)
+            phys_free = self.pages_per_instance \
+                - self._private_pages(inst.iid) - trie.n_pages
+            while phys_free < growth:
+                if trie.evict_one() is None:
+                    break
+                phys_free += 1
         items: List[WorkItem] = \
             [WorkItem("prefill", g, m.pos) for m, g in grants] + \
             [WorkItem("decode", 1, m.pos) for m in decs]
