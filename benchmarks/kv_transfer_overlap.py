@@ -14,6 +14,9 @@ def main(csv: Csv | None = None):
         plan = plan_chunked_transfer(cost, n, 512)
         mono = monolithic_exposed(cost, n)
         red = (1 - plan.exposed / mono) * 100
+        assert plan.exposed < mono, \
+            f"chunking must hide transfer time ({n} tok: " \
+            f"{plan.exposed*1e3:.2f}ms !< {mono*1e3:.2f}ms)"
         csv.add(f"kvt/chunked_{n}tok", plan.exposed * 1e6,
                 f"exposed={plan.exposed*1e3:.2f}ms mono={mono*1e3:.2f}ms "
                 f"reduction={red:.1f}% (paper: 94%)")
@@ -23,6 +26,10 @@ def main(csv: Csv | None = None):
     m = sim.run(reqs)
     naive = m.transfer_bytes_total / cost.hw.link_bw
     red = (1 - m.transfer_exposed_total / naive) * 100 if naive else 0.0
+    # acceptance floor: the live schedule must hide at least half of the
+    # raw link time behind compute, or overlap is effectively broken
+    assert red >= 50.0, \
+        f"live exposed-transfer reduction {red:.1f}% < 50% floor"
     csv.add("kvt/live_mini_reasoning", m.transfer_exposed_total * 1e6,
             f"bytes={m.transfer_bytes_total/1e9:.2f}GB "
             f"exposed={m.transfer_exposed_total*1e3:.1f}ms "

@@ -23,6 +23,7 @@ MODULES = [
     "tab3_overhead",
     "tab4_sensitivity",
     "kv_transfer_overlap",
+    "async_overlap",
     "ablation_split",
     "elastic_shift",
     "online_serving",

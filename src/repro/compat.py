@@ -46,3 +46,19 @@ def cost_analysis_dict(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         return cost[0] if cost else {}
     return cost
+
+
+def array_is_ready(x) -> bool:
+    """Non-blocking completion probe for an asynchronously-dispatched
+    jax.Array.  ``is_ready()`` exists on committed device arrays in
+    recent jax; where the attribute is missing (old versions, numpy
+    fallbacks, tracers) report ready — the subsequent blocking collect
+    is then the synchronization point, which is always correct, just
+    less overlapped."""
+    probe = getattr(x, "is_ready", None)
+    if probe is None:
+        return True
+    try:
+        return bool(probe())
+    except Exception:
+        return True

@@ -10,6 +10,7 @@ computes the timeline: per-chunk ready times, link occupancy, and the
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Sequence, Tuple
 
 from repro.core.costmodel import BatchCostModel, WorkItem
@@ -70,6 +71,28 @@ def plan_chunked_transfer(cost: BatchCostModel, n_tokens: int,
         total_bytes=total_bytes,
         timeline=timeline,
     )
+
+
+def plan_background_stream(t0: float, ready: float, nbytes: float,
+                           chunk_bytes: float,
+                           max_chunks: int = 8) -> List[float]:
+    """Chunk-landing times for an overlapped in-flight handoff.
+
+    The policy already computed the transfer's end-to-end window
+    ``[t0, ready]`` (via ``plan_chunked_transfer`` /
+    ``monolithic_exposed``); the session's background stream splits it
+    into per-chunk delivery events so decode batches interleave with
+    the landing chunks instead of waiting for the whole transfer.  The
+    chunk count follows the same sizing rule as the timeline planner
+    (``ceil(bytes / chunk_bytes)``), capped so a huge monolithic
+    handoff does not flood the event queue."""
+    n = 1
+    if chunk_bytes > 0 and nbytes > 0:
+        n = max(1, min(max_chunks, math.ceil(nbytes / chunk_bytes)))
+    span = max(0.0, ready - t0)
+    times = [t0 + span * (i + 1) / n for i in range(n)]
+    times[-1] = ready      # the stream completes exactly on schedule
+    return times
 
 
 def monolithic_exposed(cost: BatchCostModel, n_tokens: int,

@@ -169,7 +169,9 @@ class LocalScheduler:
     def next_batch(self, prefill_queue: Sequence[PrefillWork],
                    decode_queue: Sequence[DecodeWork],
                    free_pages: Optional[int] = None,
-                   page_size: Optional[int] = None) -> BatchPlan:
+                   page_size: Optional[int] = None,
+                   n_inflight: int = 0,
+                   inflight_latency: float = 0.0) -> BatchPlan:
         """Compose one unified batch.
 
         With ``free_pages``/``page_size`` (a paged-KV backend) the batch
@@ -178,6 +180,17 @@ class LocalScheduler:
         grant is capped to the pages left.  Work that does not fit is
         *deferred* (it stays queued; ``plan.starved`` tells the session)
         rather than overflowing the pool mid-batch.
+
+        ``n_inflight``/``inflight_latency`` describe batches already
+        dispatched ahead (pipelined execution): the device serializes
+        them before this batch, so every decode stream's TBT spans the
+        in-flight batch PLUS this one.  The SLO inversion for the
+        prefill budget M therefore (a) counts the in-flight decode
+        streams as co-running and (b) sizes M against the SLO window
+        *left over* after the in-flight work drains — without this, a
+        pipelined prefill-heavy batch behind a decode batch would pay
+        two full SLO budgets per token.  Defaults (0, 0.0 — the
+        synchronous loop) keep the original budget.
         """
         mem_aware = free_pages is not None and bool(page_size)
         starved = False
@@ -195,8 +208,13 @@ class LocalScheduler:
             decodes.append(d)
         d_ctx = int(sum(d.ctx for d in decodes) / max(1, len(decodes)))
         p_ctx = max((w.ctx for w in prefill_queue), default=0)
-        M = self.max_prefill_allowed(d_ctx, len(decodes), p_ctx=p_ctx,
-                                     slo=self.effective_slo(decodes))
+        slo_eff = self.effective_slo(decodes)
+        if inflight_latency > 0.0:
+            # leave at least a sliver of budget so prefill cannot starve
+            # forever behind a permanently-full pipeline
+            slo_eff = max(slo_eff * 0.25, slo_eff - inflight_latency)
+        M = self.max_prefill_allowed(d_ctx, len(decodes) + n_inflight,
+                                     p_ctx=p_ctx, slo=slo_eff)
         grants: List[Tuple[PrefillWork, int]] = []
         budget = M
         # earliest-TTFT-deadline first; unclassed work keeps FCFS order

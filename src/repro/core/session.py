@@ -30,6 +30,16 @@ Online API::
 Offline/trace API (open-loop arrival-driven, both backends)::
 
     metrics = session.run(trace)  # SessionMetrics incl. per-SLO-class
+
+Overlapped execution (``SessionConfig.overlap``): the session pipelines
+up to ``pipeline_depth`` batches per instance — batch N+1 is composed
+and dispatched (``Backend.dispatch``) while batch N's device work is in
+flight, and alpha→beta KV handoffs run as chunked background streams
+interleaved with decode instead of blocking the loop.  Composition only
+ever draws from micro-requests NOT in flight (a stream's next step
+issues strictly after its previous step completes), so the token
+streams are identical to the synchronous path — only wall-clock and
+exposed-transfer time change.
 """
 from __future__ import annotations
 
@@ -43,12 +53,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.costmodel import BatchCostModel, WorkItem
+from repro.core.kv_transfer import plan_background_stream
 from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
 from repro.core.paging import pages_for
 from repro.core.predictor import ExecutionPredictor, QueuedWork
 from repro.core.request import (
     MicroRequest, Request, RequestState, SLOClass,
 )
+
+# Process-wide default for ``SessionConfig.overlap=None`` — the test
+# harness flips this (pytest --overlap) to rerun every existing suite
+# with the pipelined loop default-on.
+DEFAULT_OVERLAP = False
 
 
 def queued_view(inst: "InstanceState") -> List[QueuedWork]:
@@ -69,6 +85,13 @@ class SessionStallError(RuntimeError):
     instance can make progress (e.g. a beta whose KV handoff will never
     arrive, or work stranded on a fully-draining pool).  Raised instead
     of busy-looping or silently returning incomplete results."""
+
+
+class HandoffStreamError(RuntimeError):
+    """A background KV stream could not complete its import (e.g. the
+    destination page pool ran out mid-stream).  Backends raise this from
+    ``stream_pump``; the session aborts the stream, drops the partial
+    import, and falls back to recompute."""
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +117,53 @@ class MicroState:
         return self.mr.rid
 
 
+@dataclasses.dataclass(eq=False)
+class ExecHandle:
+    """One dispatched batch, possibly still in flight on the substrate.
+
+    ``token`` is the backend's opaque in-flight handle (``dispatch``
+    returned it instead of an ``ExecResult``); ``result`` is filled at
+    collection.  ``overlapped`` marks handles issued through the
+    non-blocking ``dispatch`` path so completion bookkeeping
+    (``Backend.on_complete``) fires exactly once per dispatch."""
+    iid: int
+    grants: List[Tuple[MicroState, int]]
+    decs: List[MicroState]
+    plan: object
+    issued_at: float
+    token: object = None
+    result: Optional["ExecResult"] = None
+    overlapped: bool = False
+
+    @property
+    def micros(self) -> set:
+        return {m for m, _ in self.grants} | set(self.decs)
+
+
+@dataclasses.dataclass(eq=False)
+class TransferStream:
+    """One in-flight background KV handoff (alpha → beta).
+
+    Virtual backends model the stream as chunk-landing events at
+    ``times`` (totals identical to the synchronous accounting); real
+    backends pump ``token`` (a backend stream object) one piece per
+    "xfer" event, double-buffered against the export.  The finished
+    alpha (``src``) stays pinned — its slot is only released once the
+    last chunk lands, so the export always reads live pages."""
+    beta: MicroState
+    src: Optional[MicroState] = None
+    token: object = None
+    t_ready: float = 0.0          # virtual: when the last chunk lands
+    exposed: float = 0.0
+    nbytes: float = 0.0
+    times: List[float] = dataclasses.field(default_factory=list)
+    chunk_i: int = 0
+    sent: float = 0.0
+    release_src: bool = False     # src micro finished; release at done
+    done: bool = False
+    aborted: bool = False
+
+
 class InstanceState:
     """One pool member: queues + the local scheduler composing its
     batches.  The *execution substrate* behind it lives in the backend."""
@@ -105,8 +175,7 @@ class InstanceState:
         self.role = role           # unified | prefill | decode
         self.prefill_q: List[MicroState] = []
         self.decode_q: List[MicroState] = []
-        self.busy = False
-        self.in_flight: set = set()    # micros inside the running batch
+        self.inflight: List[ExecHandle] = []   # dispatched, not collected
         # elastic lifecycle: active segments [(start, end|None), ...]
         self.draining = False
         self.retired = False
@@ -116,6 +185,20 @@ class InstanceState:
         self.flops_done = 0.0
         self.bytes_done = 0.0
         self.kv_tokens_resident = 0
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.inflight)
+
+    @property
+    def in_flight(self) -> set:
+        """Micros inside any dispatched-but-uncollected batch: excluded
+        from composition (a micro's next step issues only after its
+        previous completes), preemption, and migration."""
+        out: set = set()
+        for h in self.inflight:
+            out |= h.micros
+        return out
 
     @property
     def role_bias(self) -> float:
@@ -159,6 +242,10 @@ class ExecResult:
     latency: float
     tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
     deferred: bool = True   # True: completion fires at now+latency (sim)
+    # Pure device occupancy when ``latency`` also covers pipeline wait
+    # (overlapped dispatch): busy-time accounting uses this so a
+    # two-deep pipeline does not double-count the queued interval.
+    device_time: Optional[float] = None
 
 
 class Backend:
@@ -208,9 +295,62 @@ class Backend:
                 decs: Sequence[MicroState]) -> ExecResult:
         raise NotImplementedError
 
+    # ---- overlapped (dispatch-ahead) execution ----
+    # ``interleave`` is an optional completion-delivery schedule (see
+    # repro.sim.simulator.InterleaveSchedule): the session permutes
+    # concurrently-in-flight completion events through it, making every
+    # async ordering seeded and replayable.
+    interleave = None
+
+    def dispatch(self, inst: InstanceState,
+                 grants: Sequence[Tuple[MicroState, int]],
+                 decs: Sequence[MicroState], now: float = 0.0):
+        """Begin executing a batch without blocking on its result.
+
+        Returns either an ``ExecResult`` (virtual/synchronous substrate
+        — the completion is fully known at dispatch) or an opaque
+        in-flight token to be ``poll``ed / ``collect``ed.  The default
+        wraps the blocking ``execute`` so substrates that never
+        override this still run under an overlapped session."""
+        return self.execute(inst, grants, decs)
+
+    def poll(self, token) -> bool:
+        """True when ``collect(token)`` would not block."""
+        return True
+
+    def collect(self, token) -> ExecResult:
+        """Block until the dispatched batch finishes; return its result."""
+        raise NotImplementedError
+
+    def on_complete(self, inst: InstanceState,
+                    grants: Sequence[Tuple[MicroState, int]],
+                    decs: Sequence[MicroState]) -> None:
+        """Completion bookkeeping for a batch issued via ``dispatch``
+        (e.g. the simulator returns the batch's in-flight page growth
+        to the free pool).  Called exactly once per dispatched batch,
+        before the session advances any micro's position."""
+
     def do_handoff(self, src: MicroState, dst: MicroState) -> float:
         """Move KV/state for a real backend; returns bytes moved."""
         return 0.0
+
+    # ---- background KV streams (overlapped handoff) ----
+    def handoff_stream(self, src: MicroState, dst: MicroState):
+        """Open a chunked background KV stream src → dst; returns an
+        opaque stream token, or None when the substrate cannot stream
+        (the session falls back to the blocking ``do_handoff``)."""
+        return None
+
+    def stream_pump(self, stream) -> Optional[float]:
+        """Move the stream's next chunk; returns bytes moved, or None
+        once the stream is complete.  Raises ``HandoffStreamError``
+        when the import cannot proceed (destination out of pages)."""
+        raise NotImplementedError
+
+    def stream_abort(self, stream) -> None:
+        """Tear down an in-flight stream (cancel / fallback); the
+        partially-imported destination pages are dropped by the
+        session through ``on_preempt``/``release``."""
 
     def on_migrate(self, micro: MicroState, src_iid: int,
                    dst_iid: int) -> bool:
@@ -295,6 +435,13 @@ class SessionConfig:
     # pool-control tick (the stall guard) — catches double-frees of
     # shared pages the moment they happen instead of as bad tokens.
     debug_kv_invariants: bool = False
+    # --- overlapped execution ---
+    # None defers to the module-level DEFAULT_OVERLAP (the pytest
+    # --overlap switch); True pipelines dispatch-ahead batches and runs
+    # KV handoffs as background streams, False is the synchronous loop.
+    overlap: Optional[bool] = None
+    pipeline_depth: int = 2        # dispatched-but-uncollected batches
+    stream_chunk_tokens: int = 512  # background-stream chunk sizing
 
 
 @dataclasses.dataclass
@@ -466,6 +613,10 @@ class ServeSession:
         self.backend = backend
         self.policy = policy
         self.cfg = cfg or SessionConfig()
+        self._overlap = (DEFAULT_OVERLAP if self.cfg.overlap is None
+                         else bool(self.cfg.overlap))
+        self._streams: Dict[str, TransferStream] = {}   # beta rid -> stream
+        self._pinned_src: Dict[str, TransferStream] = {}  # src rid -> stream
         self.cost = backend.cost
         self.predictor = ExecutionPredictor(self.cost, self.cfg.slo)
         self.instances: List[InstanceState] = []
@@ -522,12 +673,37 @@ class ServeSession:
             wall = self._wall()
         self.now = max(self.now, wall)
 
+    def _pop_event(self) -> Tuple[float, int, str, object]:
+        """Pop the next event; with an interleaving schedule attached
+        to the backend, completion deliveries ("batch_done"/"xfer")
+        that are concurrently in flight within the schedule's window
+        are permuted by its seeded choice — the same seed replays the
+        same ordering bit-identically, a different seed explores an
+        ordering the real engine would only hit under load.  The
+        chosen event is delivered at the group's earliest time, so the
+        virtual clock stays monotone."""
+        first = heapq.heappop(self._events)
+        sched = getattr(self.backend, "interleave", None)
+        if (sched is None or not self._overlap
+                or first[2] not in sched.PERMUTABLE):
+            return first
+        group = [first]
+        while self._events and len(group) < sched.width:
+            t, _, kind, _ = self._events[0]
+            if kind not in sched.PERMUTABLE or t > first[0] + sched.window:
+                break
+            group.append(heapq.heappop(self._events))
+        pick = group.pop(sched.choose(len(group)))
+        for ev in group:
+            heapq.heappush(self._events, ev)
+        return (first[0], pick[1], pick[2], pick[3])
+
     def _pump(self) -> bool:
         """Dispatch one event; False when the queue is empty (or the
         time horizon is exceeded)."""
         if not self._events:
             return False
-        t, _, kind, payload = heapq.heappop(self._events)
+        t, _, kind, payload = self._pop_event()
         if t > self.cfg.max_sim_time:
             # past the configured horizon: leave the event queue intact
             # so truncation stays distinguishable from a genuine stall
@@ -540,6 +716,18 @@ class ServeSession:
             self._on_arrival(payload)
         elif kind == "batch_done":
             self._on_batch_done(payload)
+        elif kind == "collect":
+            h: ExecHandle = payload
+            if (h.result is None and not self.backend.poll(h.token)
+                    and any(k == "xfer" for _, _, k, _ in self._events)):
+                # device still busy and a KV stream has chunks pending:
+                # pump the transfer first — this is exactly the overlap
+                # (streams are finite, so this always terminates)
+                self._push(self.now, "collect", h)
+            else:
+                self._on_batch_done(h)
+        elif kind == "xfer":
+            self._on_xfer(payload)
         elif kind == "kick":
             if payload < len(self.instances):
                 self._maybe_start_batch(self.instances[payload])
@@ -645,6 +833,12 @@ class ServeSession:
             return False
         st.req.to(RequestState.CANCELLED, self.now)
         st.cancelled = True
+        # abort in-flight background handoffs first: the src pin is
+        # released here, the beta's partial import is freed by the
+        # queue sweep below (its slot release drops the dst pages)
+        for stream in [s for s in self._streams.values()
+                       if s.beta.mr.parent.rid == rid]:
+            self._abort_stream(stream)
         for inst in self.instances:
             for q in (inst.prefill_q, inst.decode_q):
                 for m in [m for m in q if m.mr.parent.rid == rid]:
@@ -715,9 +909,19 @@ class ServeSession:
         self.pool_events.append((self.now, f"drain {iid}"))
         self._maybe_retire(inst)
 
+    def _stream_touches(self, iid: int) -> bool:
+        """An active background stream reads pages on its src instance
+        and writes pages on its dst — neither substrate may be torn
+        down mid-stream."""
+        return any(s.beta.iid == iid
+                   or (s.src is not None and s.src.iid == iid)
+                   for s in self._streams.values())
+
     def _maybe_retire(self, inst: InstanceState) -> None:
         if not (inst.draining and not inst.busy and inst.n_queued == 0):
             return
+        if self._stream_touches(inst.iid):
+            return       # re-checked when the stream finishes/aborts
         # never retire the last live member: a pool with zero active
         # instances can place no work and the session would stall — the
         # drain is cancelled instead (the old engine loop had this guard;
@@ -748,10 +952,13 @@ class ServeSession:
         def resident_kv(m: MicroState) -> int:
             return 0 if m.ready == float("inf") else m.pos
 
-        # cheapest moves first: least resident KV on the source
+        # cheapest moves first: least resident KV on the source (a beta
+        # with a background stream in flight is not movable — its
+        # destination slot is receiving pages right now)
+        flying = src.in_flight
         candidates = sorted(
             (m for m in src.prefill_q + src.decode_q
-             if m not in src.in_flight),
+             if m not in flying and m.rid not in self._streams),
             key=resident_kv)
         for m in candidates:
             if moved >= max_micros:
@@ -1016,8 +1223,16 @@ class ServeSession:
         return min(c, ((m.prefill_remaining - 1) // psize) * psize)
 
     def _compose_batch(self, inst: InstanceState):
-        pf = [m for m in inst.prefill_q if m.ready <= self.now]
-        dc = [m for m in inst.decode_q if m.ready <= self.now]
+        # conservative hazard rule: a micro inside a dispatched batch
+        # is not re-batched until that batch collects (its next decode
+        # needs the sampled token; its next prefill chunk needs pos to
+        # advance) — this is what keeps pipelined token streams
+        # identical to the synchronous ones
+        flying = inst.in_flight
+        pf = [m for m in inst.prefill_q
+              if m.ready <= self.now and m not in flying]
+        dc = [m for m in inst.decode_q
+              if m.ready <= self.now and m not in flying]
         if inst.role == "prefill":
             dc = []
         if inst.role == "decode":
@@ -1036,7 +1251,11 @@ class ServeSession:
             dworks.append(DecodeWork(m.rid, m.pos, tbt=tbt))
         plan = inst.scheduler.next_batch(
             pworks, dworks, free_pages=self.backend.free_pages(inst.iid),
-            page_size=self.backend.page_size)
+            page_size=self.backend.page_size,
+            n_inflight=sum(len(h.decs) for h in inst.inflight),
+            inflight_latency=sum(
+                getattr(h.plan, "predicted_latency", 0.0)
+                for h in inst.inflight))
         return plan, pf, dc
 
     def _seniority(self, m: MicroState):
@@ -1106,9 +1325,39 @@ class ServeSession:
             inst.decode_q.append(m)
 
     def _maybe_start_batch(self, inst: InstanceState) -> None:
-        if inst.busy or inst.retired or not inst.has_work(self.now):
+        """Fill the instance's dispatch pipeline: one batch in the
+        synchronous loop, up to ``pipeline_depth`` dispatched-ahead
+        batches when overlap is on (batch N+1 is composed from the
+        micros NOT in flight while batch N runs on the device)."""
+        if inst.retired:
             return
+        depth = max(1, self.cfg.pipeline_depth) if self._overlap else 1
+        while len(inst.inflight) < depth:
+            if self._dispatch_one(inst) is not True:
+                # False: no dispatchable work.  "inline": the batch ran
+                # synchronously to completion — its kick event resumes
+                # the loop, exactly like the pre-pipeline driver.
+                break
+
+    def _dispatch_one(self, inst: InstanceState):
+        if not inst.has_work(self.now):
+            return False
         plan, pf, dc = self._compose_batch(inst)
+        # Dispatch-ahead gate: pipelining pays off only for prefill
+        # chunk streams (pure compute, no cross-batch data hazard).
+        # Decode passes are memory-bound — their latency is nearly flat
+        # in batch width — so letting a dispatched-ahead batch carry
+        # decodes splits the decode population into alternating cohorts
+        # and doubles the number of weight-read passes, which costs far
+        # more than the host overhead pipelining hides.  Likewise,
+        # peeling prefill into its own pass behind a decode batch pays
+        # an extra weight read versus folding it into the next mixed
+        # batch.  So dispatch ahead only when BOTH the new batch and
+        # everything in flight are decode-free; decode cadence stays
+        # identical to the synchronous loop.
+        if inst.inflight and (plan.decodes or
+                              any(h.plan.dnum for h in inst.inflight)):
+            return False
         # memory-starved with runnable work: preempt (possibly several
         # victims — deep overcommit needs more than one) and retry;
         # otherwise defer — pages free as other requests finish
@@ -1118,7 +1367,7 @@ class ServeSession:
             guard -= 1
             plan, pf, dc = self._compose_batch(inst)
         if not plan.decodes and not plan.prefills:
-            return
+            return False
         # map back to MicroState; apply late prefix-cache claims now —
         # the scheduler granted the cached head budget-free, the claim
         # splices the pages and advances pos, and only the computed
@@ -1133,33 +1382,54 @@ class ServeSession:
                 grants.append((m, g))
         decs = [by_rid[w.rid] for w in plan.decodes]
         if not grants and not decs:
-            return
-        inst.in_flight = {m for m, _ in grants} | set(decs)
-        for m in inst.in_flight:
+            return False
+        h = ExecHandle(inst.iid, grants, decs, plan, self.now)
+        for m in h.micros:
             m.mr.parent.to(
                 RequestState.RUNNING_BETA if m.mr.role == "beta"
                 else RequestState.RUNNING_ALPHA, self.now)
         items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
                  [WorkItem("decode", 1, m.pos) for m in decs])
-        res = self.backend.execute(inst, grants, decs)
-        inst.busy_time += res.latency
         inst.flops_done += self.cost.flops(items)
         inst.bytes_done += self.cost.bytes_moved(items)
+        inst.inflight.append(h)
+        if self._overlap:
+            h.overlapped = True
+            out = self.backend.dispatch(inst, grants, decs, now=self.now)
+            if isinstance(out, ExecResult):
+                # virtual (or degenerate-synchronous) substrate: the
+                # completion time is already known
+                h.result = out
+                self._push(self.now + (out.latency if out.deferred
+                                       else 0.0), "batch_done", h)
+            else:
+                h.token = out
+                self._push(self.now, "collect", h)
+            return True
+        res = self.backend.execute(inst, grants, decs)
+        h.result = res
         if res.deferred:
-            inst.busy = True
-            self._push(self.now + res.latency, "batch_done",
-                       (inst.iid, grants, decs, plan, res))
-        else:
-            # synchronous substrate: the wall clock already advanced
-            self._advance(self._wall())
-            self._on_batch_done((inst.iid, grants, decs, plan, res))
+            self._push(self.now + res.latency, "batch_done", h)
+            return True
+        # synchronous substrate: the wall clock already advanced
+        self._advance(self._wall())
+        self._on_batch_done(h)
+        return "inline"
 
-    def _on_batch_done(self, payload) -> None:
-        iid, grants, decs, plan, res = payload
+    def _on_batch_done(self, h: ExecHandle) -> None:
+        iid = h.iid
         inst = self.instances[iid]
+        if h.result is None:
+            h.result = self.backend.collect(h.token)
+            self._advance(self._wall())
+        grants, decs, plan, res = h.grants, h.decs, h.plan, h.result
         self._batches_done += 1
-        inst.busy = False
-        inst.in_flight = set()
+        if h in inst.inflight:
+            inst.inflight.remove(h)
+        if h.overlapped:
+            self.backend.on_complete(inst, grants, decs)
+        inst.busy_time += (res.device_time if res.device_time is not None
+                           else res.latency)
         inst.scheduler.record(plan, res.latency)
         # prefill progress
         for m, g in grants:
@@ -1226,7 +1496,14 @@ class ServeSession:
         st = self.req_states[m.mr.parent.rid]
         st.micro_done += 1
         self.policy.on_micro_finished(m, self, self.now)
-        self.backend.release(m)
+        pin = self._pinned_src.get(m.rid)
+        if pin is not None:
+            # the policy opened a background stream sourcing this
+            # micro's pages: keep the slot alive until the last chunk
+            # is exported (the stream releases it)
+            pin.release_src = True
+        else:
+            self.backend.release(m)
         if st.micro_done >= st.n_micro and st.done_at is None:
             st.done_at = self.now
             st.req.to(RequestState.DONE, self.now)
@@ -1295,6 +1572,32 @@ class ServeSession:
                 return
         if self.backend.virtual_clock and beta.pos > 0:
             self.backend.on_handoff_import(beta)
+        # ---- overlapped handoff: chunked background stream ----
+        # The beta stays parked (ready = inf) while chunks land between
+        # decode batches; its destination keeps emitting tokens for
+        # everyone else, and the double-buffered export never stalls
+        # the source.  Totals (bytes, exposed) match the synchronous
+        # accounting exactly — only when they land differs.
+        if self._overlap:
+            if self.backend.virtual_clock and beta.pos > 0 and ready > self.now:
+                chunk_bytes = (self.cost.kv_bytes_per_tok
+                               * max(1, self.cfg.stream_chunk_tokens))
+                stream = TransferStream(
+                    beta=beta, t_ready=ready, exposed=exposed,
+                    nbytes=nbytes,
+                    times=plan_background_stream(self.now, ready, nbytes,
+                                                 chunk_bytes))
+                self._streams[beta.rid] = stream
+                self._push(stream.times[0], "xfer", stream)
+                return
+            if src is not None and not self.backend.virtual_clock:
+                token = self.backend.handoff_stream(src, beta)
+                if token is not None:
+                    stream = TransferStream(beta=beta, src=src, token=token)
+                    self._streams[beta.rid] = stream
+                    self._pinned_src[src.rid] = stream
+                    self._push(self.now, "xfer", stream)
+                    return
         if src is not None and not self.backend.virtual_clock:
             t0 = _time.monotonic()
             nbytes = self.backend.do_handoff(src, beta)
@@ -1305,6 +1608,88 @@ class ServeSession:
         self.transfer_bytes += nbytes
         beta.ready = ready
         self._push(max(self.now, ready), "kick", beta.iid)
+
+    # ---------------- background KV streams ----------------
+    def _on_xfer(self, stream: TransferStream) -> None:
+        if stream.aborted or stream.done:
+            return
+        if stream.token is None:
+            # virtual stream: chunk stream.chunk_i lands now
+            stream.chunk_i += 1
+            if stream.chunk_i < len(stream.times):
+                add = stream.nbytes / len(stream.times)
+                stream.sent += add
+                self.transfer_bytes += add
+                self._push(stream.times[stream.chunk_i], "xfer", stream)
+                return
+            # final chunk: account the exact remainder so overlap-on
+            # totals are bit-identical to the synchronous path
+            self.transfer_bytes += stream.nbytes - stream.sent
+            self.transfer_exposed += stream.exposed
+            self._finish_stream(stream, ready=stream.t_ready)
+            return
+        # real backend: pump one piece (import chunk k while the
+        # backend's stream exports chunk k+1 — double buffered)
+        t0 = _time.monotonic()
+        try:
+            nb = self.backend.stream_pump(stream.token)
+        except HandoffStreamError:
+            self._stream_fallback(stream)
+            return
+        self._advance(self._wall())
+        if nb is None:
+            self._finish_stream(stream, ready=self.now)
+            return
+        self.transfer_bytes += nb
+        # a chunk imported while the destination had no batch in
+        # flight is exposed wait; one hidden behind compute is not
+        if not self.instances[stream.beta.iid].inflight:
+            self.transfer_exposed += _time.monotonic() - t0
+        self._push(self.now, "xfer", stream)
+
+    def _finish_stream(self, stream: TransferStream,
+                       ready: float) -> None:
+        stream.done = True
+        self._streams.pop(stream.beta.rid, None)
+        self._release_stream_src(stream)
+        beta = stream.beta
+        beta.ready = ready
+        self._push(max(self.now, ready), "kick", beta.iid)
+        self._maybe_retire(self.instances[beta.iid])
+
+    def _release_stream_src(self, stream: TransferStream) -> None:
+        if stream.src is None:
+            return
+        self._pinned_src.pop(stream.src.rid, None)
+        if stream.release_src:
+            self.backend.release(stream.src)
+        if stream.src.iid < len(self.instances):
+            self._maybe_retire(self.instances[stream.src.iid])
+
+    def _abort_stream(self, stream: TransferStream) -> None:
+        stream.aborted = True
+        self._streams.pop(stream.beta.rid, None)
+        if stream.token is not None:
+            self.backend.stream_abort(stream.token)
+        self._release_stream_src(stream)
+
+    def _stream_fallback(self, stream: TransferStream) -> None:
+        """Mid-stream ``OutOfPages`` on the destination: drop the
+        partial import (no leaked pages) and recompute the beta's
+        prefix from scratch under the normal page budget."""
+        beta = stream.beta
+        self._abort_stream(stream)
+        inst = self.instances[beta.iid]
+        self.backend.on_preempt(beta)    # trim partially-imported pages
+        beta.shared_pages = 0
+        if inst.role == "decode":
+            raise HandoffStreamError(
+                f"beta {beta.rid}: destination out of pages mid-stream "
+                f"and a decode-only instance cannot recompute")
+        self._requeue_for_recompute(inst, beta)
+        beta.ready = self.now
+        self.pool_events.append((self.now, f"handoff-recompute {beta.rid}"))
+        self._push(self.now, "kick", beta.iid)
 
     # ---------------- metrics ----------------
     def _metrics(self, requests: Sequence[Request]) -> SessionMetrics:

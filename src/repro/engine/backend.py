@@ -21,10 +21,12 @@ import numpy as np
 
 from repro.core.costmodel import A100, BatchCostModel, HardwareSpec
 from repro.core.request import Request
-from repro.core.session import Backend, ExecResult, InstanceState, MicroState
-from repro.engine.block_allocator import pages_for
+from repro.core.session import (
+    Backend, ExecResult, HandoffStreamError, InstanceState, MicroState,
+)
+from repro.engine.block_allocator import OutOfPages, pages_for
 from repro.engine.runner import (
-    DEFAULT_MAX_CHUNK, BatchItem, InstanceEngine,
+    DEFAULT_MAX_CHUNK, BatchItem, InstanceEngine, StepHandle,
 )
 from repro.engine.sampling import sample
 from repro.models.config import ModelConfig
@@ -52,6 +54,72 @@ class _ReqRecord:
     def sampled_upto(self) -> int:
         """First position whose token has NOT been sampled yet."""
         return len(self.prompt) + len(self.generated)
+
+
+@dataclasses.dataclass(eq=False)
+class _EngineToken:
+    """An in-flight dispatched batch: the device work is running; the
+    sampling plan waits for ``collect``."""
+    eng: InstanceEngine
+    step: Optional[StepHandle]
+    sampled: List[Tuple[MicroState, int]]
+    t0: float
+
+
+class _KVStream:
+    """A background alpha→beta KV transfer, pumped piece-by-piece by the
+    session between batches.  Double-buffered: piece k+1 is exported
+    (device→host) before piece k is imported, so the export of the next
+    chunk overlaps the import of the current one and the source engine
+    is never idle-blocked on the destination."""
+
+    def __init__(self, backend: "EngineBackend", src_eng: InstanceEngine,
+                 dst_eng: InstanceEngine, src_slot: int, dst_slot: int,
+                 src: MicroState, dst: MicroState, start: int):
+        self.backend = backend
+        self.src_eng = src_eng
+        self.dst_eng = dst_eng
+        self.src_slot = src_slot
+        self.dst_slot = dst_slot
+        self.src = src
+        self.dst = dst
+        self.upto = src.pos
+        self.total_bytes = backend._transfer_bytes(src_eng, src.pos,
+                                                   start=start)
+        self.sent = 0.0
+        self._gen = src_eng.export_state_iter(
+            src_slot, upto=src.pos, chunk=backend.transfer_chunk,
+            start=start)
+        # export-ahead: the first piece is snapshotted at stream start
+        self._next_piece = next(self._gen, None)
+
+    def pump(self) -> Optional[float]:
+        """Import one piece; export the next one ahead.  Returns bytes
+        moved, or None when the stream is complete (the beta's position
+        then covers the full handoff).  ``OutOfPages`` on the import
+        propagates to the caller."""
+        piece = self._next_piece
+        if piece is None:
+            self.dst.pos = max(self.dst.pos, self.upto)
+            return None
+        # double-buffer: snapshot piece k+1 before importing piece k
+        self._next_piece = next(self._gen, None)
+        self.dst_eng.import_state(self.dst_slot, [piece])
+        if self._next_piece is None:
+            nb = self.total_bytes - self.sent
+        else:
+            lo, hi = piece["span"]
+            nb = min(self.total_bytes - self.sent,
+                     (hi - lo) * self.backend.cost.kv_bytes_per_tok)
+        self.sent += nb
+        self.backend.kv_bytes_moved += int(nb)
+        return float(nb)
+
+    def abort(self) -> None:
+        self._next_piece = None
+        close = getattr(self._gen, "close", None)
+        if close is not None:
+            close()
 
 
 class EngineBackend(Backend):
@@ -209,10 +277,9 @@ class EngineBackend(Backend):
                 eng.preempt(loc[1])
 
     # ---------------- execution ----------------
-    def execute(self, inst: InstanceState,
-                grants: Sequence[Tuple[MicroState, int]],
-                decs: Sequence[MicroState]) -> ExecResult:
-        eng = self.engines[inst.iid]
+    def _build(self, grants: Sequence[Tuple[MicroState, int]],
+               decs: Sequence[MicroState]) \
+            -> Tuple[List[BatchItem], List[Tuple[MicroState, int]]]:
         items: List[BatchItem] = []
         sampled: List[Tuple[MicroState, int]] = []
         for m, g in grants:
@@ -236,16 +303,41 @@ class EngineBackend(Backend):
             items.append(BatchItem(slot, np.array([tok], np.int32), m.pos,
                                    want_logits=True))
             sampled.append((m, slot))
+        return items, sampled
+
+    def dispatch(self, inst: InstanceState,
+                 grants: Sequence[Tuple[MicroState, int]],
+                 decs: Sequence[MicroState], now: float = 0.0):
+        """Non-blocking submission: build the batch, issue the jitted
+        step (jax dispatches asynchronously), return a token.  The
+        session polls it and calls ``collect`` when the device logits
+        are (nearly) ready — host-side scheduling and KV streaming
+        happen in between."""
+        eng = self.engines[inst.iid]
+        items, sampled = self._build(grants, decs)
         t0 = time.monotonic()
-        out = eng.run_batch(items)
-        latency = time.monotonic() - t0
+        step = eng.dispatch_batch(items)
+        return _EngineToken(eng=eng, step=step, sampled=sampled, t0=t0)
+
+    def poll(self, token) -> bool:
+        return token.step is None or token.step.ready()
+
+    def collect(self, token) -> ExecResult:
+        """Block on the token's step, sample, and return the result."""
+        out = token.eng.collect_batch(token.step)
+        latency = time.monotonic() - token.t0
         tokens: Dict[str, int] = {}
-        for m, slot in sampled:
+        for m, slot in token.sampled:
             if slot in out:
                 tok = sample(out[slot])
                 self.records[m.mr.parent.rid].generated.append(tok)
                 tokens[m.rid] = tok
         return ExecResult(latency=latency, tokens=tokens, deferred=False)
+
+    def execute(self, inst: InstanceState,
+                grants: Sequence[Tuple[MicroState, int]],
+                decs: Sequence[MicroState]) -> ExecResult:
+        return self.collect(self.dispatch(inst, grants, decs))
 
     # ---------------- KV/state movement ----------------
     def _transfer_bytes(self, eng: InstanceEngine, upto: int,
@@ -279,9 +371,37 @@ class EngineBackend(Backend):
         self.kv_bytes_moved += nbytes
         return float(nbytes)
 
+    def handoff_stream(self, src: MicroState,
+                       dst: MicroState) -> Optional[_KVStream]:
+        """Open a background alpha→beta KV stream (the overlapped form
+        of ``do_handoff``): same page-aligned prefix-skip, but pieces
+        move one ``stream_pump`` at a time, interleaved with batches.
+        Returns None when there is nothing to move (the session then
+        completes the handoff synchronously for free)."""
+        si, ss = self._slots[src.rid]
+        di, ds = self._slots[dst.rid]
+        src_eng = self.engines[si]
+        dst_eng = self.engines[di]
+        start = 0
+        if src_eng.paged and dst_eng.allocator is not None:
+            start = min(dst_eng.allocator.len_of(ds), src.pos)
+            start -= start % src_eng.page_size
+        if start >= src.pos:
+            dst.pos = max(dst.pos, src.pos)
+            return None
+        return _KVStream(self, src_eng, dst_eng, ss, ds, src, dst, start)
+
+    def stream_pump(self, stream: _KVStream) -> Optional[float]:
+        try:
+            return stream.pump()
+        except OutOfPages as e:
+            raise HandoffStreamError(str(e)) from e
+
+    def stream_abort(self, stream: _KVStream) -> None:
+        stream.abort()
+
     def on_migrate(self, micro: MicroState, src_iid: int,
                    dst_iid: int) -> bool:
-        from repro.engine.block_allocator import OutOfPages
         dst = self.engines.get(dst_iid)
         if dst is None or dst.n_free == 0:
             return False

@@ -51,7 +51,8 @@ class ServingCluster:
                  split: bool = True, hw: HardwareSpec = A100,
                  slo: float = 0.100, admission: bool = False,
                  default_slo: Optional[SLOClass] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 overlap: Optional[bool] = None):
         from repro.sim.policies import ColocationPolicy, DynaServePolicy
         self.backend = EngineBackend(cfg, params, n_slots, max_len, hw,
                                      transfer_chunk,
@@ -66,7 +67,7 @@ class ServingCluster:
             self.gs = None
         self.session = ServeSession(self.backend, self.policy, SessionConfig(
             n_instances=n_instances, slo=slo, admission=admission,
-            default_slo=default_slo))
+            default_slo=default_slo, overlap=overlap))
 
     # ---------------- elastic pool lifecycle ----------------
     @property

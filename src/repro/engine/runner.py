@@ -65,6 +65,21 @@ class BatchItem:
     want_logits: bool = False   # final chunk of prefill / decode step
 
 
+@dataclasses.dataclass(eq=False)
+class StepHandle:
+    """An in-flight forward step: the jitted call has been issued (jax
+    dispatches asynchronously) but its logits have not been fetched to
+    host.  ``ready()`` probes completion without blocking;
+    ``InstanceEngine.collect_batch`` blocks and materializes the
+    results."""
+    items: Sequence[BatchItem]
+    logits: object              # device array, possibly still computing
+
+    def ready(self) -> bool:
+        from repro.compat import array_is_ready
+        return array_is_ready(self.logits)
+
+
 class InstanceEngine:
     """One unified instance.
 
@@ -265,8 +280,20 @@ class InstanceEngine:
     def run_batch(self, items: Sequence[BatchItem]) -> Dict[int, np.ndarray]:
         """Execute one unified mixed batch; returns {slot: last-token logits}
         for items with want_logits."""
+        return self.collect_batch(self.dispatch_batch(items))
+
+    def dispatch_batch(self, items: Sequence[BatchItem]) \
+            -> Optional[StepHandle]:
+        """Issue one unified mixed batch without waiting for the device.
+
+        All host-side work happens here — padding, block-table growth,
+        the jitted call — and jax's async dispatch returns the logits as
+        a device array immediately.  The caller overlaps host work
+        (scheduling the next batch, pumping KV streams) with the device
+        and later blocks in ``collect_batch``.  Returns ``None`` for an
+        empty batch."""
         if not items:
-            return {}
+            return None
         T = bucket_of(max(len(it.tokens) for it in items), self.buckets)
         B = self.n_slots
         tokens = np.zeros((B, T), np.int32)
@@ -302,8 +329,17 @@ class InstanceEngine:
                                   *args)
         self.iterations += 1
         self.tokens_processed += int(sum(len(it.tokens) for it in items))
-        logits = np.asarray(logits)
-        return {it.slot: logits[it.slot] for it in items if it.want_logits}
+        return StepHandle(items=items, logits=logits)
+
+    def collect_batch(self, handle: Optional[StepHandle]) \
+            -> Dict[int, np.ndarray]:
+        """Block on an in-flight step and return {slot: last-token
+        logits} for its want_logits items."""
+        if handle is None:
+            return {}
+        logits = np.asarray(handle.logits)
+        return {it.slot: logits[it.slot]
+                for it in handle.items if it.want_logits}
 
     def _apply_forks(self, forks: Sequence[Tuple[int, int]]) -> None:
         """Copy KV contents of copy-on-write-forked pages (old -> new)
@@ -428,25 +464,43 @@ class InstanceEngine:
                               for k, v in self.cache["cross"].items()}
         return pieces
 
+    def export_state_iter(self, slot: int, upto: int, chunk: int = 0,
+                          start: int = 0):
+        """Lazy chunk-at-a-time export for background KV streams: each
+        ``next()`` materializes (device→host copies) exactly one piece,
+        so the caller can interleave decode batches between pieces
+        instead of snapshotting the whole span up front.  Paged engines
+        stream pages lazily; dense caches fall back to the eager export
+        (their final piece carries recurrent/ring state that must be
+        captured together)."""
+        if self.paged:
+            return self._export_paged_iter(slot, upto, chunk, start=start)
+        return iter(self.export_state(slot, upto, chunk, start=start))
+
     def _export_paged(self, slot: int, upto: int, chunk: int = 0,
                       start: int = 0) -> List[dict]:
+        return list(self._export_paged_iter(slot, upto, chunk, start=start))
+
+    def _export_paged_iter(self, slot: int, upto: int, chunk: int = 0,
+                           start: int = 0):
         """Page-granular export: whole physical pages, grouped into
         pieces of ``ceil(chunk / page_size)`` pages each (the transfer
         chunk is rounded *up* to page boundaries).  ``start`` (a page
-        boundary) drops the leading pages from the export."""
+        boundary) drops the leading pages from the export.  The page-id
+        table is snapshotted up front (append-only KV: already-exported
+        spans are immutable), then pieces are copied out lazily."""
         page = self.page_size
         if start % page:
             raise ValueError(f"export start {start} is not page-aligned")
-        table = self.allocator.pages_of(slot)
+        table = list(self.allocator.pages_of(slot))
         n_need = pages_for(upto, page)
         if n_need > len(table):
             raise OutOfPages(
                 f"slot {slot}: export of {upto} tokens needs {n_need} "
                 f"pages, table holds {len(table)}")
         if start >= upto:
-            return []
+            return
         per_piece = pages_for(chunk, page) if chunk else max(1, n_need)
-        pieces: List[dict] = []
         for p0 in range(start // page, max(1, n_need), per_piece):
             p1 = min(p0 + per_piece, n_need)
             ids = np.asarray(table[p0:p1], np.int32)
@@ -458,10 +512,9 @@ class InstanceEngine:
                     "k": np.asarray(c["k_pages"][:, ids]),
                     "v": np.asarray(c["v_pages"][:, ids]),
                 })
-            pieces.append(piece)
+            yield piece
             if p1 >= n_need:
                 break
-        return pieces
 
     def _import_paged(self, slot: int, pieces: Sequence[dict]) -> None:
         """Allocate destination pages for every piece, then write each

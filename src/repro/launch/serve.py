@@ -64,6 +64,12 @@ def report(m: SessionMetrics, label: str) -> None:
           f"rejected={m.rejected} cancelled={m.cancelled} "
           f"duration={m.duration:.2f}s goodput={m.goodput:.1f} tok/s "
           f"p99_tbt={m.p99_tbt()*1e3:.1f}ms")
+    if m.transfer_bytes_total:
+        # exposed = transfer time the destination actually waited (not
+        # hidden behind compute); with --overlap this should be a small
+        # fraction of the bytes' wire time
+        print(f"kv-transfer: {m.transfer_bytes_total/1e6:.2f} MB moved, "
+              f"exposed={m.transfer_exposed_total*1e3:.1f}ms")
     if m.prefix_lookups:
         print(f"prefix-cache: hit_rate={m.prefix_hit_rate:.2f} "
               f"({m.prefix_hits}/{m.prefix_lookups}) "
@@ -101,11 +107,13 @@ def serve_engine(args) -> SessionMetrics:
     policy = DynaServePolicy(backend.cost, args.slo)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
-        admission=args.admission, open_loop=args.open_loop))
+        admission=args.admission, open_loop=args.open_loop,
+        overlap=True if args.overlap else None))
     m = session.run(reqs)
     report(m, f"engine backend ({cfg.name}), "
               f"{'open' if args.open_loop else 'closed'}-loop, "
-              f"admission={'on' if args.admission else 'off'}")
+              f"admission={'on' if args.admission else 'off'}, "
+              f"overlap={'on' if args.overlap else 'off'}")
     if not args.admission and m.completed != m.offered:
         raise SystemExit(f"smoke failure: {m.offered - m.completed} "
                          f"request(s) did not complete")
@@ -142,11 +150,13 @@ def serve_sim(args) -> SessionMetrics:
         backend = SimBackend(cost)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
-        admission=args.admission))
+        admission=args.admission,
+        overlap=True if args.overlap else None))
     m = session.run(reqs)
     report(m, f"sim backend, {args.workload} @ {args.qps} qps, "
               f"policy={args.policy}, "
-              f"admission={'on' if args.admission else 'off'}")
+              f"admission={'on' if args.admission else 'off'}, "
+              f"overlap={'on' if args.overlap else 'off'}")
     return m
 
 
@@ -169,6 +179,11 @@ def main(argv=None):
                     help="class=weight list; empty string = unclassed")
     ap.add_argument("--admission", action="store_true",
                     help="enable TTFT-predicting admission control")
+    ap.add_argument("--overlap", action="store_true",
+                    help="pipelined dispatch-ahead execution with "
+                         "background KV streams (token streams are "
+                         "identical; wall-clock and exposed-transfer "
+                         "improve)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the shared-prefix KV cache (use a "
                          "shared-prefix --workload to see hits)")

@@ -42,9 +42,45 @@ SimMicro = MicroState
 SimInstance = InstanceState
 
 __all__ = [
-    "ClusterSim", "SimBackend", "SimConfig", "SimMetrics", "SimMicro",
-    "SimInstance", "SessionStallError", "ServeHandle", "ReqState",
+    "ClusterSim", "InterleaveSchedule", "SimBackend", "SimConfig",
+    "SimMetrics", "SimMicro", "SimInstance", "SessionStallError",
+    "ServeHandle", "ReqState",
 ]
+
+
+class InterleaveSchedule:
+    """Seeded delivery order for concurrently-in-flight completions.
+
+    With overlapped execution, several batch completions and KV-stream
+    chunks can be in flight at once; on real hardware their delivery
+    order depends on load.  Attached to a ``SimBackend``, this schedule
+    makes that order a *controlled input*: whenever the session is
+    about to deliver a completion event ("batch_done"/"xfer") and
+    others are pending within ``window`` simulated seconds, the
+    schedule's seeded RNG picks which one lands first.  The same seed
+    replays the same ordering bit-identically; sweeping seeds explores
+    orderings the real engine only hits under load.  ``mode="fifo"``
+    degenerates to plain earliest-first delivery."""
+
+    PERMUTABLE = ("batch_done", "xfer")
+
+    def __init__(self, seed: int = 0, window: float = 1e-3,
+                 width: int = 8, mode: str = "random"):
+        if mode not in ("random", "fifo"):
+            raise ValueError(f"unknown interleave mode {mode!r}")
+        self.seed = seed
+        self.window = window
+        self.width = max(1, width)
+        self.mode = mode
+        self.rng = np.random.default_rng(seed)
+        self.choices = 0       # permutation points encountered (tests)
+
+    def choose(self, n: int) -> int:
+        if n > 1:
+            self.choices += 1
+        if n <= 1 or self.mode == "fifo":
+            return 0
+        return int(self.rng.integers(n))
 
 
 class SimBackend(Backend):
@@ -67,7 +103,9 @@ class SimBackend(Backend):
 
     def __init__(self, cost: BatchCostModel, page_size: Optional[int] = None,
                  pages_per_instance: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 host_overhead: float = 0.0,
+                 interleave: Optional[InterleaveSchedule] = None):
         if bool(page_size) != bool(pages_per_instance):
             raise ValueError(
                 "page_size and pages_per_instance must be set together "
@@ -83,6 +121,21 @@ class SimBackend(Backend):
         self.pages_per_instance = pages_per_instance
         self.prefix_cache = prefix_cache
         self.has_prefix_cache = prefix_cache
+        # Per-batch host-side overhead (scheduling, sampling, Python):
+        # the cost the dispatch-ahead pipeline hides.  0.0 keeps the
+        # seed's pure-device clock, in which overlap-on and overlap-off
+        # produce identical wall-clock timelines (the parity tests rely
+        # on this); benchmarks set a realistic value to measure the
+        # pipelining win.
+        self.host_overhead = host_overhead
+        # Optional seeded permutation of completion-event delivery; see
+        # InterleaveSchedule.  None = deterministic earliest-first.
+        self.interleave = interleave
+        # device-serialization state for overlapped dispatch: per
+        # instance, the virtual time its device frees up
+        self._device_free: Dict[int, float] = {}
+        # pages reserved by batches dispatched but not yet completed
+        self._inflight_pages: Dict[int, int] = {}
         self._placed: Dict[int, Dict[str, MicroState]] = {}
         # shared-prefix model: the engine's trie, per instance, over the
         # trace's prompt token ids with *virtual* page ids — identical
@@ -98,6 +151,8 @@ class SimBackend(Backend):
     def retire(self, iid: int) -> None:
         # the engine's cache dies with the engine; model the same
         self._tries.pop(iid, None)
+        self._device_free.pop(iid, None)
+        self._inflight_pages.pop(iid, None)
 
     # ---------------- shared-prefix model ----------------
     @staticmethod
@@ -222,6 +277,7 @@ class SimBackend(Backend):
         as free because the engine evicts them on demand, strictly
         before preempting any request."""
         used = self._private_pages(iid)
+        used += self._inflight_pages.get(iid, 0)
         trie = self._tries.get(iid)
         if trie is not None:
             used += trie.pinned_pages
@@ -236,28 +292,81 @@ class SimBackend(Backend):
         return self.pages_per_instance if self.page_size else None
 
     # ---------------- execution ----------------
-    def execute(self, inst: InstanceState,
-                grants: Sequence[Tuple[MicroState, int]],
-                decs: Sequence[MicroState]) -> ExecResult:
+    def _batch_growth(self, grants: Sequence[Tuple[MicroState, int]],
+                      decs: Sequence[MicroState]) -> int:
+        """KV pages this batch will newly occupy (0 without paging)."""
+        p = self.page_size
+        if not p:
+            return 0
+        growth = sum(pages_for(m.pos + g, p) - pages_for(m.pos, p)
+                     for m, g in grants)
+        growth += sum(1 for m in decs if m.pos % p == 0)
+        return growth
+
+    def _account_batch_growth(self, inst: InstanceState,
+                              grants: Sequence[Tuple[MicroState, int]],
+                              decs: Sequence[MicroState]) -> int:
+        growth = self._batch_growth(grants, decs)
         trie = self._tries.get(inst.iid)
         if trie is not None:
             # the engine allocates this batch's pages inside run_batch,
             # evicting LRU cached prefixes when the free list runs dry;
             # mirror that here so both tries shrink at the same points
-            p = self.page_size
-            growth = sum(pages_for(m.pos + g, p) - pages_for(m.pos, p)
-                         for m, g in grants)
-            growth += sum(1 for m in decs if m.pos % p == 0)
             phys_free = self.pages_per_instance \
                 - self._private_pages(inst.iid) - trie.n_pages
             while phys_free < growth:
                 if trie.evict_one() is None:
                     break
                 phys_free += 1
+        return growth
+
+    def execute(self, inst: InstanceState,
+                grants: Sequence[Tuple[MicroState, int]],
+                decs: Sequence[MicroState]) -> ExecResult:
+        self._account_batch_growth(inst, grants, decs)
         items: List[WorkItem] = \
             [WorkItem("prefill", g, m.pos) for m, g in grants] + \
             [WorkItem("decode", 1, m.pos) for m in decs]
-        return ExecResult(latency=self.cost.latency(items), deferred=True)
+        # the synchronous loop pays the host-side dispatch cost serially
+        # before every batch — exactly what dispatch-ahead hides
+        return ExecResult(latency=self.host_overhead +
+                          self.cost.latency(items), deferred=True)
+
+    def dispatch(self, inst: InstanceState,
+                 grants: Sequence[Tuple[MicroState, int]],
+                 decs: Sequence[MicroState], now: float = 0.0):
+        """Overlapped submission: the batch queues behind whatever the
+        instance's device is already running (devices execute one batch
+        at a time — pipelining hides *host* overhead, it does not make
+        the device twice as fast) and its completion event fires when
+        the device-serialized work drains.  Pages the batch will grow
+        into are reserved immediately so the memory-aware scheduler and
+        admission control see in-flight growth exactly like the engine's
+        allocator, which allocates inside ``dispatch_batch``."""
+        growth = self._account_batch_growth(inst, grants, decs)
+        if growth:
+            self._inflight_pages[inst.iid] = \
+                self._inflight_pages.get(inst.iid, 0) + growth
+        items: List[WorkItem] = \
+            [WorkItem("prefill", g, m.pos) for m, g in grants] + \
+            [WorkItem("decode", 1, m.pos) for m in decs]
+        device = self.cost.latency(items)
+        start = max(now + self.host_overhead, self._device_free.get(inst.iid, 0.0))
+        done = start + device
+        self._device_free[inst.iid] = done
+        return ExecResult(latency=done - now, deferred=True,
+                          device_time=device)
+
+    def on_complete(self, inst: InstanceState,
+                    grants: Sequence[Tuple[MicroState, int]],
+                    decs: Sequence[MicroState]) -> None:
+        # positions have not advanced yet, so this recomputes exactly
+        # the growth reserved at dispatch; the pages flip from the
+        # in-flight reservation to the micros' resident footprint
+        growth = self._batch_growth(grants, decs)
+        if growth:
+            left = self._inflight_pages.get(inst.iid, 0) - growth
+            self._inflight_pages[inst.iid] = max(0, left)
 
 
 class ClusterSim(ServeSession):

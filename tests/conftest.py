@@ -6,3 +6,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 # Tests must see ONE device (the dry-run subprocess sets its own flags).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--overlap", action="store_true", default=False,
+        help="run every suite with pipelined (dispatch-ahead) execution "
+             "default-on: sessions that don't pin SessionConfig.overlap "
+             "use the async engine path, guarding the compat path "
+             "(token streams must not change)")
+
+
+def pytest_configure(config):
+    if config.getoption("--overlap"):
+        import repro.core.session as session
+        session.DEFAULT_OVERLAP = True
