@@ -9,6 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config                      # noqa: E402
 from repro.core.costmodel import A100, BatchCostModel     # noqa: E402
+from repro.core.metrics_util import pctl                  # noqa: E402
 from repro.sim import (                                   # noqa: E402
     ClusterSim, ColocationPolicy, DisaggregationPolicy, DynaServePolicy,
     ElasticDynaServePolicy, SimConfig,
@@ -43,14 +44,13 @@ def capacity_search(cost, policy_factory, trace_factory, *, qps_lo=0.25,
                     duration=32.0, attain_target=0.99):
     """Max sustainable QPS with p99 TBT under the SLO (paper §6.3:
     'allowing only 1% of requests to violate the TBT SLO')."""
-    import numpy as _np
     # Workload-scaled queueing bound: TBT alone misses prefill queueing
     # (an overloaded system would still "pass" after draining), so bound
     # p99 TTFT at a few multiples of the workload's intrinsic SLO-paced
     # prefill time (long-prompt workloads legitimately have multi-second
     # TTFT under 100 ms TBT batching).
     probe = trace_factory(qps_lo)
-    p95_prompt = float(_np.percentile([r.P for r in probe], 95)) if probe else 2048
+    p95_prompt = pctl([r.P for r in probe], 95, default=2048)
     rate = max(1.0, cost.max_prefill_tokens(0.1, 8, 2048)) / 0.1
     ttft_bound = max(8.0, 4.0 * p95_prompt / rate + 2.0)
     best = 0.0
@@ -58,8 +58,7 @@ def capacity_search(cost, policy_factory, trace_factory, *, qps_lo=0.25,
     for _ in range(iters):
         q = (lo + hi) / 2
         m = run_sim(cost, policy_factory(), trace_factory(q))
-        p99_ttft = (float(_np.percentile(m.ttfts, 99))
-                    if len(m.ttfts) else float("inf"))
+        p99_ttft = pctl(m.ttfts, 99, default=float("inf"))
         ok = (m.completed >= 0.95 * m.offered and
               m.token_attainment >= attain_target and
               p99_ttft <= ttft_bound)
@@ -72,14 +71,20 @@ def capacity_search(cost, policy_factory, trace_factory, *, qps_lo=0.25,
 
 
 class Csv:
-    """Benchmark output contract: ``name,us_per_call,derived`` lines."""
+    """Benchmark output contract: ``name,us_per_call,derived`` lines.
+
+    ``rows`` keeps the same data structured (the runner's ``--json``
+    trajectory output); ``module`` is stamped by the runner."""
 
     def __init__(self):
         self.lines = []
+        self.rows = []
 
     def add(self, name: str, us_per_call: float, derived: str = ""):
         line = f"{name},{us_per_call:.3f},{derived}"
         self.lines.append(line)
+        self.rows.append({"name": name, "us_per_call": round(us_per_call, 3),
+                          "derived": derived, "module": None})
         print(line, flush=True)
 
 

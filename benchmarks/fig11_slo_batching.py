@@ -3,6 +3,7 @@ DynaServe's serving-capacity QPS (paper: 52% -> 99% within 100 ms)."""
 import numpy as np
 
 from benchmarks.common import Csv, cost_for, make_policy, run_sim
+from repro.core.metrics_util import pctl
 from repro.data import generate_trace
 
 
@@ -17,7 +18,7 @@ def main(csv: Csv | None = None, duration=40.0, qps=2.5):
     for name, m in (("with_slo_batching", m_on), ("without", m_off)):
         within = float((m.tbts <= 0.1).mean()) if len(m.tbts) else 0.0
         for pct in (50, 90, 99):
-            v = float(np.percentile(m.tbts, pct)) if len(m.tbts) else 0.0
+            v = pctl(m.tbts, pct)
             csv.add(f"fig11/{name}/p{pct}", v * 1e6, f"tbt={v*1e3:.1f}ms")
         csv.add(f"fig11/{name}/attain", within * 100,
                 f"tokens_within_100ms={within*100:.1f}%")

@@ -1,0 +1,71 @@
+"""HTTP serving capacity: the full front door under closed-loop load.
+
+Boots an in-process ``ServingServer`` (ephemeral port), drives it with
+the asyncio load generator at increasing client concurrency, and reports
+both sides of the stack:
+
+* client-observed rows — mean request latency (the ``us_per_call``
+  column), request and token throughput, admission rejections;
+* session-side rows — per-SLO-class goodput and SLO attainment pulled
+  from ``session.metrics()`` through the driver, i.e. the paper's §6
+  quality metrics measured under real HTTP concurrency instead of a
+  replayed trace.
+
+Default backend is the simulator (CI-sized; virtual-clock service,
+real HTTP + threading).  ``python -m benchmarks.http_serving --backend
+engine`` runs the same loop against real JAX engines.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Csv
+
+LEVELS = (2, 8)
+DURATION = 4.0
+
+
+def run_backend(csv: Csv, backend: str, levels=LEVELS,
+                duration: float = DURATION) -> None:
+    from repro.serving.http import ServerConfig, ServingServer
+    from repro.serving.loadgen import run_load
+
+    cfg = ServerConfig(port=0, backend=backend, admission=True,
+                       retain_finished=True,
+                       max_tokens_cap=64 if backend == "engine" else 512)
+    srv = ServingServer(cfg).start()
+    try:
+        for clients in levels:
+            rep = run_load("127.0.0.1", srv.port, clients=clients,
+                           duration=duration,
+                           prompt_len=24 if backend == "engine" else 32,
+                           max_new=8 if backend == "engine" else 16,
+                           seed=17 + clients)
+            if rep["errors"]:
+                raise RuntimeError(
+                    f"{rep['errors']} client errors at c={clients}")
+            csv.add(f"http_serving/{backend}/c{clients}",
+                    rep["latency_mean"] * 1e6,
+                    f"rps={rep['rps']:.1f};tok_s={rep['tok_per_s']:.1f};"
+                    f"rejected={rep['rejected']}")
+        m = srv.driver.call(lambda s: s.metrics())
+        for name in sorted(m.per_class):
+            c = m.per_class[name]
+            csv.add(f"http_serving/{backend}/goodput/{name}",
+                    c.ttft_p50 * 1e6,
+                    f"goodput={c.goodput:.1f};attain={c.attainment:.2f};"
+                    f"done={c.completed};rej={c.rejected}")
+    finally:
+        srv.stop()
+
+
+def main(csv: Csv) -> None:
+    run_backend(csv, "sim")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=["sim", "engine"], default="sim")
+    ap.add_argument("--duration", type=float, default=DURATION)
+    args = ap.parse_args()
+    run_backend(Csv(), args.backend, duration=args.duration)

@@ -2,11 +2,15 @@
 
 Each benchmark prints ``name,us_per_call,derived`` CSV lines; this runner
 executes them all (the dry-run-dependent roofline table reads
-results/dryrun/*.json if present).
+results/dryrun/*.json if present).  ``--json PATH`` additionally writes
+the structured rows — one object per CSV line, stamped with its module
+and wall time — for the BENCH_*.json result trajectory.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig9,tab2]
+  PYTHONPATH=src python -m benchmarks.run [--only fig9,tab2] [--json out]
 """
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -28,6 +32,7 @@ MODULES = [
     "elastic_shift",
     "online_serving",
     "prefix_reuse",
+    "http_serving",
     "kernel_bench",
     "roofline",
 ]
@@ -37,14 +42,18 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings of module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured results (rows + failures) here")
     args = ap.parse_args(argv)
     sel = args.only.split(",") if args.only else None
     csv = Csv()
     failures = []
+    timings = {}
     for mod_name in MODULES:
         if sel and not any(s in mod_name for s in sel):
             continue
         t0 = time.time()
+        n0 = len(csv.rows)
         print(f"### benchmarks.{mod_name}", flush=True)
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
@@ -52,8 +61,26 @@ def main(argv=None) -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((mod_name, repr(e)))
             print(f"!! {mod_name} FAILED: {e!r}", flush=True)
-        print(f"### {mod_name} done in {time.time()-t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        timings[mod_name] = round(dt, 3)
+        for row in csv.rows[n0:]:
+            row["module"] = mod_name
+        print(f"### {mod_name} done in {dt:.1f}s", flush=True)
     print(f"\n{len(csv.lines)} benchmark rows, {len(failures)} failures")
+    if args.json:
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({
+                "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                              time.gmtime()),
+                "modules": {m: timings[m] for m in timings},
+                "rows": csv.rows,
+                "failures": [{"module": m, "error": e} for m, e in failures],
+            }, f, indent=2)
+            f.write("\n")
+        print(f"wrote {len(csv.rows)} rows to {args.json}")
     if failures:
         for name, err in failures:
             print(f"  FAILED {name}: {err}")

@@ -4,6 +4,7 @@ reported in us)."""
 import numpy as np
 
 from benchmarks.common import Csv, cost_for, make_policy, run_sim
+from repro.core.metrics_util import pctl
 from repro.data import generate_trace
 
 
@@ -16,7 +17,7 @@ def main(csv: Csv | None = None, duration=25.0):
         m = run_sim(cost, make_policy("dyna", cost), reqs)
         ovh = m.scheduling_overheads
         mean = float(np.mean(ovh)) if len(ovh) else 0.0
-        p99 = float(np.percentile(ovh, 99)) if len(ovh) else 0.0
+        p99 = pctl(ovh, 99)
         means.append(mean)
         csv.add(f"tab3/qps{qps}", mean * 1e6,
                 f"mean={mean*1e3:.3f}ms p99={p99*1e3:.3f}ms "

@@ -3,6 +3,10 @@ streaming token delivery, SLO classes, mid-flight cancellation — with a
 correctness check that scheduling never changes generations (the same
 batch served in colocation mode is token-identical).
 
+Builds the session directly from its parts (``EngineBackend`` + policy),
+the way new code should; the ``ServingCluster`` wrapper remains only as
+a compat shim for seed-era callers.
+
   PYTHONPATH=src python examples/serve_cluster.py [--arch mamba2-780m]
 """
 import argparse
@@ -17,8 +21,18 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.request import BATCH, INTERACTIVE, RequestState
-from repro.engine.cluster import ServingCluster
+from repro.core.session import ServeSession, SessionConfig
+from repro.engine.backend import EngineBackend
 from repro.models.model import init_params
+from repro.sim.policies import ColocationPolicy, DynaServePolicy
+
+
+def make_session(cfg, params, n_slots, split: bool):
+    backend = EngineBackend(cfg, params, n_slots=n_slots, max_len=192)
+    policy = (DynaServePolicy(backend.cost, 0.100) if split
+              else ColocationPolicy(chunk=64, slo_aware=False))
+    session = ServeSession(backend, policy, SessionConfig(n_instances=2))
+    return session, backend
 
 
 def main():
@@ -42,25 +56,24 @@ def main():
                for i, (p, _) in enumerate(specs)]
 
     def serve(split):
-        cluster = ServingCluster(cfg, params, n_instances=2,
-                                 n_slots=2 * args.requests,
-                                 max_len=192, split=split)
+        session, backend = make_session(cfg, params, 2 * args.requests,
+                                        split)
         t0 = time.time()
-        handles = [cluster.session.generate(
+        handles = [session.generate(
             prompts[i], d, rid=f"req{i}",
             slo=INTERACTIVE if i % 2 else BATCH)
             for i, (_, d) in enumerate(specs)]
         outs = [list(h) for h in handles]       # stream every request
-        return handles, outs, time.time() - t0, cluster
+        return handles, outs, time.time() - t0, backend
 
-    hs_dyn, outs_dyn, dt_dyn, cl = serve(split=True)
+    hs_dyn, outs_dyn, dt_dyn, be = serve(split=True)
     hs_col, outs_col, dt_col, _ = serve(split=False)
 
     toks = sum(len(t) for t in outs_dyn)
     print(f"arch={cfg.name} requests={len(hs_dyn)} output_tokens={toks}")
     print(f"DynaServe (2 unified instances): {dt_dyn:.2f}s wall "
           f"({toks/dt_dyn:.1f} tok/s CPU), KV handoff "
-          f"{cl.kv_bytes_moved/1024:.1f} KiB")
+          f"{be.kv_bytes_moved/1024:.1f} KiB")
     print(f"Colocation  (no splitting):      {dt_col:.2f}s wall")
     same = all(a == b for a, b in zip(outs_dyn, outs_col))
     print("generations identical across scheduling modes:", same)
@@ -70,8 +83,8 @@ def main():
               f"-> {toks_h[:6]}...")
 
     # mid-flight cancellation frees slots and aborts pending handoffs
-    cluster = ServingCluster(cfg, params, n_instances=2, max_len=192)
-    h = cluster.session.generate(prompts[0], 24, rid="cancelme")
+    session, _ = make_session(cfg, params, 8, split=True)
+    h = session.generate(prompts[0], 24, rid="cancelme")
     for i, _tok in enumerate(h):
         if i == 2:
             h.cancel()

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core.costmodel import BatchCostModel, WorkItem
 from repro.core.kv_transfer import plan_background_stream
 from repro.core.local_scheduler import DecodeWork, LocalScheduler, PrefillWork
+from repro.core.metrics_util import pctl
 from repro.core.paging import pages_for
 from repro.core.predictor import ExecutionPredictor, QueuedWork
 from repro.core.request import (
@@ -408,6 +409,14 @@ class Backend:
     def check_invariants(self) -> None:
         """Debug hook: assert KV refcount/occupancy coherence."""
 
+    def gauges(self, iid: int) -> Dict[str, float]:
+        """Substrate-level gauge sample for the observability layer
+        (``repro.serving.metrics``): slot/page occupancy, prefix-cache
+        size — whatever the substrate meters.  Keys become Prometheus
+        gauge names (``dynaserve_backend_<key>``), values are current
+        readings.  Empty by default; sampling must not mutate state."""
+        return {}
+
 
 # ---------------------------------------------------------------------------
 # Config + metrics
@@ -530,10 +539,10 @@ class SessionMetrics:
         return self.tokens_in_slo / max(1e-9, self.instance_seconds)
 
     def p99_tbt(self) -> float:
-        return float(np.percentile(self.tbts, 99)) if len(self.tbts) else 0.0
+        return pctl(self.tbts, 99)
 
     def p50_tbt(self) -> float:
-        return float(np.percentile(self.tbts, 50)) if len(self.tbts) else 0.0
+        return pctl(self.tbts, 50)
 
 
 # ---------------------------------------------------------------------------
@@ -613,6 +622,13 @@ class ServeSession:
         self.backend = backend
         self.policy = policy
         self.cfg = cfg or SessionConfig()
+        # Observability hooks (repro.serving): objects appended here get
+        # lifecycle callbacks — ``on_request(req, now)`` at arrival,
+        # ``on_transition(req, old, new, now)`` on each state change,
+        # ``on_placed(req, placements, now)`` after the global scheduler
+        # splits/places, ``on_token(req, now)`` per delivered token.
+        # Observers must treat the session as read-only.
+        self.observers: List[object] = []
         self._overlap = (DEFAULT_OVERLAP if self.cfg.overlap is None
                          else bool(self.cfg.overlap))
         self._streams: Dict[str, TransferStream] = {}   # beta rid -> stream
@@ -652,6 +668,22 @@ class ServeSession:
         self.n_instances_peak = self.cfg.n_instances
         self.pool_events: List[Tuple[float, str]] = []
         self.sched_overheads: List[float] = []
+
+    # ---------------- observability plumbing ----------------
+    def _notify(self, event: str, *args) -> None:
+        for ob in self.observers:
+            fn = getattr(ob, event, None)
+            if fn is not None:
+                fn(*args)
+
+    def _to(self, req: Request, state: str) -> None:
+        """Transition a request's lifecycle, notifying observers on an
+        actual change (terminal states are sticky, and batch re-issues
+        re-assert RUNNING_* every pass — observers see each edge once)."""
+        old = req.state
+        req.to(state, self.now)
+        if req.state != old:
+            self._notify("on_transition", req, old, req.state, self.now)
 
     # ---------------- event plumbing ----------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -831,7 +863,7 @@ class ServeSession:
         st = self.req_states.get(rid)
         if st is None or st.req.terminal:
             return False
-        st.req.to(RequestState.CANCELLED, self.now)
+        self._to(st.req, RequestState.CANCELLED)
         st.cancelled = True
         # abort in-flight background handoffs first: the src pin is
         # released here, the beta's partial import is freed by the
@@ -1127,7 +1159,7 @@ class ServeSession:
 
     def _reject(self, r: Request, reason: str,
                 arrival: Optional[float] = None) -> None:
-        r.to(RequestState.REJECTED, self.now)
+        self._to(r, RequestState.REJECTED)
         st = self.req_states.setdefault(
             r.rid, ReqState(r, arrival=r.arrival if arrival is None
                             else arrival))
@@ -1150,12 +1182,13 @@ class ServeSession:
             else r.arrival
         if r.slo is None and self.cfg.default_slo is not None:
             r.slo = self.cfg.default_slo
+        self._notify("on_request", r, self.now)
         self.backend.register(r)
         shed_reason = self._admit(r)
         if shed_reason is not None:
             self._reject(r, shed_reason, arrival=arrival)
             return
-        r.to(RequestState.ADMITTED, self.now)
+        self._to(r, RequestState.ADMITTED)
         placements = self.policy.place(r, self, self.now)
         if hasattr(self.policy, "last_overhead"):
             self.sched_overheads.append(self.policy.last_overhead)
@@ -1175,6 +1208,7 @@ class ServeSession:
         st = ReqState(r, arrival=arrival, n_micro=len(placements))
         self.req_states[r.rid] = st
         self._open_requests += 1
+        self._notify("on_placed", r, placements, self.now)
         for inst_id, sm in placements:
             inst = self.instances[inst_id]
             # real backends: the final forward pass is not needed for the
@@ -1385,9 +1419,9 @@ class ServeSession:
             return False
         h = ExecHandle(inst.iid, grants, decs, plan, self.now)
         for m in h.micros:
-            m.mr.parent.to(
-                RequestState.RUNNING_BETA if m.mr.role == "beta"
-                else RequestState.RUNNING_ALPHA, self.now)
+            self._to(m.mr.parent,
+                     RequestState.RUNNING_BETA if m.mr.role == "beta"
+                     else RequestState.RUNNING_ALPHA)
         items = ([WorkItem("prefill", g, m.pos) for m, g in grants] +
                  [WorkItem("decode", 1, m.pos) for m in decs])
         inst.flops_done += self.cost.flops(items)
@@ -1465,6 +1499,7 @@ class ServeSession:
                 self._emit(st, m, res.tokens.get(m.rid))
             else:
                 st.token_times.append(self.now)
+                self._notify("on_token", m.mr.parent, self.now)
                 h = self.handles.get(m.mr.parent.rid)
                 if h is not None:
                     h.tokens.append(m.pos - 1)   # synthetic: position
@@ -1481,6 +1516,7 @@ class ServeSession:
         st.token_times.append(self.now)
         if st.ttft is None:
             st.ttft = self.now - st.arrival
+        self._notify("on_token", m.mr.parent, self.now)
         h = self.handles.get(m.mr.parent.rid)
         if h is not None and tok is not None:
             h.tokens.append(tok)
@@ -1506,7 +1542,7 @@ class ServeSession:
             self.backend.release(m)
         if st.micro_done >= st.n_micro and st.done_at is None:
             st.done_at = self.now
-            st.req.to(RequestState.DONE, self.now)
+            self._to(st.req, RequestState.DONE)
             self._open_requests -= 1
             self._finalize(st)
 
@@ -1532,7 +1568,7 @@ class ServeSession:
             # degenerate tail micro (its only token was emitted by the
             # alpha's final pass): nothing to hand off or run
             return
-        beta.mr.parent.to(RequestState.HANDOFF, self.now)
+        self._to(beta.mr.parent, RequestState.HANDOFF)
         # ---- prefix-cache hit on the DESTINATION ----
         # pages the beta's instance already caches for this prompt are
         # claimed into its slot and never cross the link; the modeled
@@ -1748,9 +1784,9 @@ class ServeSession:
             cr.goodput = cr.tokens_in_slo / duration
             tf = cls_ttfts.get(name, [])
             tb = cls_tbts.get(name, [])
-            cr.ttft_p50 = float(np.percentile(tf, 50)) if tf else 0.0
-            cr.ttft_p99 = float(np.percentile(tf, 99)) if tf else 0.0
-            cr.tbt_p99 = float(np.percentile(tb, 99)) if tb else 0.0
+            cr.ttft_p50 = pctl(tf, 50)
+            cr.ttft_p99 = pctl(tf, 99)
+            cr.tbt_p99 = pctl(tb, 99)
         mfu, hbm, busy = [], [], []
         inst_seconds = 0.0
         for inst in self.instances:

@@ -183,6 +183,24 @@ class EngineBackend(Backend):
     def total_pages(self, iid: int) -> Optional[int]:
         return self.n_pages
 
+    def gauges(self, iid: int) -> Dict[str, float]:
+        """Engine-side occupancy sample for /metrics: slot and KV-page
+        utilisation plus prefix-cache size, per instance."""
+        eng = self.engines.get(iid)
+        if eng is None:
+            return {}
+        out: Dict[str, float] = {
+            "slots_free": float(eng.n_free),
+            "slots_total": float(self.n_slots),
+        }
+        if self.paged:
+            out["kv_pages_free"] = float(eng.free_pages)
+            out["kv_pages_total"] = float(self.n_pages)
+        if eng.prefix is not None:
+            out["prefix_cache_pages"] = float(eng.prefix.n_pages)
+            out["prefix_pinned_pages"] = float(eng.prefix.pinned_pages)
+        return out
+
     # ---------------- request plumbing ----------------
     def register(self, req: Request, prompt=None) -> None:
         if req.rid in self.records:

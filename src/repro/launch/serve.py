@@ -160,10 +160,40 @@ def serve_sim(args) -> SessionMetrics:
     return m
 
 
+def serve_http(args) -> None:
+    """Long-lived front door: OpenAI-compatible HTTP + /metrics."""
+    from repro.serving.http import ServerConfig, ServingServer
+
+    cfg = ServerConfig(
+        host=args.host, port=args.port,
+        backend=args.backend or "sim", arch=args.arch,
+        n_instances=args.instances, slo=args.slo,
+        admission=args.admission, overlap=args.overlap or None,
+        prefix_cache=args.prefix_cache, page_size=args.page_size,
+        pages_per_instance=args.pages_per_instance,
+        trace_path=args.trace_log)
+    server = ServingServer(cfg)
+    server.start()
+    print(f"serving {cfg.backend} backend on http://{cfg.host}:{server.port}")
+    print(f"  POST /v1/completions | /v1/chat/completions   (SSE: "
+          f'"stream": true; classes: "slo": interactive|standard|batch)')
+    print(f"  GET  /metrics /healthz /v1/models")
+    if args.trace_log:
+        print(f"  trace spans -> {args.trace_log}")
+    server.serve_forever()
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--backend", choices=["sim", "engine"], default=None,
                     help="default: engine with --smoke, sim otherwise")
+    ap.add_argument("--http", action="store_true",
+                    help="run the OpenAI-compatible HTTP front door "
+                         "instead of a batch trace (Ctrl-C to stop)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--trace-log", default=None,
+                    help="append per-request span JSONL here (--http)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model + tiny trace (CI-sized)")
     ap.add_argument("--open-loop", action="store_true",
@@ -204,6 +234,9 @@ def main(argv=None):
     ap.add_argument("--policy", choices=["dyna", "elastic"], default="dyna")
     args = ap.parse_args(argv)
 
+    if args.http:
+        serve_http(args)
+        return 0
     backend = args.backend or ("engine" if args.smoke else "sim")
     if backend == "engine":
         serve_engine(args)

@@ -1,0 +1,34 @@
+"""Production front door: OpenAI-compatible streaming HTTP serving over
+``ServeSession``, with a Prometheus metrics surface and per-request
+tracing.  Dependency-free by design — the project depends only on
+numpy + jax, so the HTTP layer is stdlib ``asyncio`` and the metrics
+registry renders the Prometheus text format itself.
+
+Layers (each usable on its own):
+
+* ``repro.serving.metrics`` — counters/gauges/histograms + the
+  ``ServingMetrics`` hub that observes a session and samples backend
+  gauges (exposed at ``GET /metrics``).
+* ``repro.serving.tracing`` — per-request span timelines
+  (queued→admitted→placed→prefill→handoff→decode→finish) emitted as
+  JSON lines; the ``trace_id`` rides on every HTTP response.
+* ``repro.serving.driver`` — the ``SessionDriver`` thread that owns the
+  (single-threaded) ``ServeSession`` and fans tokens out to subscribers.
+* ``repro.serving.http`` — the asyncio front door: ``/v1/completions``
+  and ``/v1/chat/completions`` with SSE streaming, ``/healthz``,
+  ``/metrics``, per-API-key admission, cancel-on-disconnect.
+* ``repro.serving.loadgen`` — closed-loop HTTP load generator (the
+  capacity benchmark's client; ``--smoke --self-serve`` is the CI job).
+"""
+from repro.serving.driver import SessionDriver
+from repro.serving.http import ApiKeyGate, KeyQuota, ServingServer
+from repro.serving.metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, ServingMetrics,
+)
+from repro.serving.tracing import Tracer
+
+__all__ = [
+    "ApiKeyGate", "Counter", "Gauge", "Histogram", "KeyQuota",
+    "MetricsRegistry", "ServingMetrics", "SessionDriver", "ServingServer",
+    "Tracer",
+]

@@ -291,6 +291,22 @@ class SimBackend(Backend):
     def total_pages(self, iid: int) -> Optional[int]:
         return self.pages_per_instance if self.page_size else None
 
+    def gauges(self, iid: int) -> Dict[str, float]:
+        """Modeled occupancy sample for /metrics — the same keys the
+        engine backend reports, so dashboards read identically over
+        either substrate."""
+        out: Dict[str, float] = {}
+        if self.page_size:
+            out["kv_pages_free"] = float(self.free_pages(iid))
+            out["kv_pages_total"] = float(self.pages_per_instance)
+            out["kv_pages_inflight"] = float(
+                self._inflight_pages.get(iid, 0))
+        trie = self._tries.get(iid)
+        if trie is not None:
+            out["prefix_cache_pages"] = float(trie.n_pages)
+            out["prefix_pinned_pages"] = float(trie.pinned_pages)
+        return out
+
     # ---------------- execution ----------------
     def _batch_growth(self, grants: Sequence[Tuple[MicroState, int]],
                       decs: Sequence[MicroState]) -> int:

@@ -251,6 +251,79 @@ def test_cancel_mid_stream_releases_both_sides(smoke_model):
         assert eng.n_free == eng.n_slots
 
 
+def test_sim_cancel_mid_stream_releases_pages():
+    """Sim analogue of the engine mid-stream cancel: a victim whose
+    background KV stream is live is cancelled; the stream aborts, pinned
+    source pages release, in-flight reservations return to the pool, and
+    an innocent bystander still completes."""
+    cost = sim_cost()
+    be = SimBackend(cost, page_size=32, pages_per_instance=512)
+    sess = ServeSession(be, DisaggregationPolicy(), SessionConfig(
+        n_instances=2, slo=0.1, overlap=True))
+    h = sess.generate(prompt_len=2048, decode_len=8, rid="victim")
+    other = sess.generate(prompt_len=64, decode_len=4, rid="other")
+    for _ in range(10_000):
+        if sess._streams or h.done:
+            break
+        assert sess._pump()
+    assert sess._streams, "handoff stream never opened"
+    assert sess.cancel("victim")
+    assert h.state == "cancelled"
+    other.result()
+    while sess._pump():
+        pass
+    assert len(other.tokens) == 4
+    assert not sess._streams and not sess._pinned_src
+    for iid in range(len(sess.instances)):
+        g = be.gauges(iid)
+        assert be._inflight_pages.get(iid, 0) == 0
+        assert g["kv_pages_free"] == g["kv_pages_total"], \
+            f"instance {iid} leaked pages: {g}"
+
+
+def test_sim_cancel_pending_beta_before_stream():
+    """Cancelling before a single event is pumped: the beta is queued
+    with its handoff still pending (no stream yet) — the sweep must drop
+    the queued micros and release their claims without a stream abort."""
+    cost = sim_cost()
+    be = SimBackend(cost, page_size=32, pages_per_instance=512)
+    sess = ServeSession(be, DisaggregationPolicy(), SessionConfig(
+        n_instances=2, slo=0.1, overlap=True))
+    h = sess.generate(prompt_len=1024, decode_len=8, rid="victim")
+    assert not sess._streams
+    assert sess.cancel("victim")
+    assert h.done and h.state == "cancelled"
+    while sess._pump():
+        pass
+    assert not sess._streams and not sess._pinned_src
+    for iid in range(len(sess.instances)):
+        g = be.gauges(iid)
+        assert be._inflight_pages.get(iid, 0) == 0
+        assert g["kv_pages_free"] == g["kv_pages_total"]
+
+
+def test_engine_cancel_pending_beta_releases_slots(smoke_model):
+    """Engine path: cancel lands while the beta handoff is still pending
+    (before any pump) — both micro slots free, allocators whole."""
+    from repro.engine.backend import EngineBackend
+    cfg, params = smoke_model
+    be = EngineBackend(cfg, params, n_slots=4, max_len=128)
+    sess = ServeSession(be, DisaggregationPolicy(), SessionConfig(
+        n_instances=2, slo=0.1, open_loop=False, overlap=True,
+        debug_kv_invariants=True))
+    prompt = np.arange(24, dtype=np.int32) % cfg.vocab_size
+    h = sess.generate(prompt, 8, rid="victim")
+    assert sess.cancel("victim")
+    assert h.state == "cancelled"
+    while sess._pump():
+        pass
+    assert not sess._streams and not sess._pinned_src
+    assert not be._slots, f"leaked slots: {be._slots}"
+    for eng in be.engines.values():
+        eng.check_invariants()
+        assert eng.n_free == eng.n_slots
+
+
 def test_outofpages_mid_stream_falls_back_to_recompute():
     """Virtual-pool analogue via the engine path: a beta hitting
     OutOfPages mid-import aborts the stream without leaking the partial

@@ -1,0 +1,376 @@
+"""End-to-end tests for the HTTP front door: real TCP, both backends.
+
+Each test talks to an in-process ``ServingServer`` on an ephemeral port
+over actual sockets — the full path (asyncio loop thread -> driver
+thread -> session -> backend) is exercised, including the paths a unit
+test can't reach: SSE chunked framing, mid-stream client disconnects,
+and per-key admission."""
+import json
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.http import KeyQuota, ServerConfig, ServingServer
+
+from tests.test_serving_metrics import validate_exposition
+
+
+# ---------------------------------------------------------------------------
+# raw-socket HTTP client helpers (stdlib only, like the server)
+# ---------------------------------------------------------------------------
+def _request(port, method, path, body=None, headers=None, timeout=30.0):
+    """One HTTP exchange; returns (status, headers, body_bytes)."""
+    s = socket.create_connection(("127.0.0.1", port), timeout=timeout)
+    try:
+        payload = b"" if body is None else json.dumps(body).encode()
+        head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+        if payload:
+            head += (f"Content-Type: application/json\r\n"
+                     f"Content-Length: {len(payload)}\r\n")
+        for k, v in (headers or {}).items():
+            head += f"{k}: {v}\r\n"
+        s.sendall(head.encode() + b"\r\n" + payload)
+        data = b""
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            data += chunk
+    finally:
+        s.close()
+    head, _, rest = data.partition(b"\r\n\r\n")
+    lines = head.decode("latin-1").split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    hdrs = {}
+    for line in lines[1:]:
+        k, _, v = line.partition(":")
+        hdrs[k.strip().lower()] = v.strip()
+    if "chunked" in hdrs.get("transfer-encoding", ""):
+        body_out = b""
+        while rest:
+            size_line, _, rest = rest.partition(b"\r\n")
+            n = int(size_line or b"0", 16)
+            if n == 0:
+                break
+            body_out += rest[:n]
+            rest = rest[n + 2:]
+        return status, hdrs, body_out
+    return status, hdrs, rest
+
+
+def _sse_events(body: bytes):
+    return [line[len("data: "):]
+            for line in body.decode().replace("\r\n", "\n").split("\n")
+            if line.startswith("data: ")]
+
+
+def _post(port, body, path="/v1/completions", headers=None):
+    return _request(port, "POST", path, body=body, headers=headers)
+
+
+# ---------------------------------------------------------------------------
+# sim-backend server (module fixture: one boot for the fast tests)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sim_server():
+    srv = ServingServer(ServerConfig(
+        port=0, backend="sim", admission=False, retain_finished=True,
+        tick_events=8)).start()
+    yield srv
+    srv.stop()
+
+
+def test_healthz(sim_server):
+    status, _, body = _request(sim_server.port, "GET", "/healthz")
+    obj = json.loads(body)
+    assert status == 200 and obj["status"] == "ok"
+    assert obj["backend"] == "sim"
+
+
+def test_models_listing(sim_server):
+    status, _, body = _request(sim_server.port, "GET", "/v1/models")
+    assert status == 200
+    assert json.loads(body)["data"][0]["id"] == "dynaserve"
+
+
+def test_unary_completion(sim_server):
+    status, hdrs, body = _post(sim_server.port, {
+        "prompt": "hello front door", "max_tokens": 6})
+    assert status == 200
+    out = json.loads(body)
+    assert out["object"] == "text_completion"
+    assert out["usage"]["completion_tokens"] == 6
+    assert out["choices"][0]["finish_reason"] == "length"
+    assert len(out["choices"][0]["text"].split()) == 6
+    assert hdrs["x-request-id"].startswith("http-")
+    assert hdrs["x-trace-id"].startswith("trace-")
+
+
+def test_token_id_prompt_and_slo_class(sim_server):
+    status, _, body = _post(sim_server.port, {
+        "prompt": [1, 2, 3, 4, 5, 6, 7, 8], "max_tokens": 4,
+        "slo": "interactive"})
+    assert status == 200
+    assert json.loads(body)["usage"]["prompt_tokens"] == 8
+
+
+def test_streaming_sse(sim_server):
+    status, hdrs, body = _post(sim_server.port, {
+        "prompt": "stream these tokens", "max_tokens": 5, "stream": True})
+    assert status == 200
+    assert hdrs["content-type"].startswith("text/event-stream")
+    events = _sse_events(body)
+    assert events[-1] == "[DONE]"
+    chunks = [json.loads(e) for e in events[:-1]]
+    texts = [c["choices"][0]["text"] for c in chunks]
+    assert sum(1 for t in texts if t) == 5
+    assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+    assert all(c["object"] == "text_completion" for c in chunks)
+
+
+def test_chat_completion_unary_and_stream(sim_server):
+    msg = {"messages": [{"role": "system", "content": "be brief"},
+                        {"role": "user", "content": "hi"}],
+           "max_tokens": 4}
+    status, _, body = _post(sim_server.port, msg,
+                            path="/v1/chat/completions")
+    assert status == 200
+    out = json.loads(body)
+    assert out["object"] == "chat.completion"
+    assert out["choices"][0]["message"]["role"] == "assistant"
+    status, _, body = _post(sim_server.port, {**msg, "stream": True},
+                            path="/v1/chat/completions")
+    assert status == 200
+    events = _sse_events(body)
+    assert events[-1] == "[DONE]"
+    deltas = [json.loads(e)["choices"][0]["delta"] for e in events[:-1]]
+    assert sum(1 for d in deltas if d.get("content")) == 4
+
+
+def test_bad_requests(sim_server):
+    port = sim_server.port
+    assert _post(port, {"max_tokens": 4})[0] == 400          # no prompt
+    assert _post(port, {"prompt": "", "max_tokens": 4})[0] == 400
+    assert _post(port, {"prompt": "x", "max_tokens": 0})[0] == 400
+    assert _post(port, {"prompt": "x", "slo": "platinum"})[0] == 400
+    assert _post(port, {"prompt": [1, "a"]})[0] == 400       # mixed tokens
+    assert _request(port, "GET", "/nope")[0] == 404
+    assert _request(port, "GET", "/v1/completions")[0] == 405
+
+
+def test_metrics_endpoint_valid_and_populated(sim_server):
+    # traffic from earlier tests has flowed; histograms must be coherent
+    status, hdrs, body = _request(sim_server.port, "GET", "/metrics")
+    assert status == 200
+    assert "text/plain" in hdrs["content-type"]
+    text = body.decode()
+    validate_exposition(text)
+    for needle in ("dynaserve_requests_total", "dynaserve_ttft_seconds",
+                   "dynaserve_tbt_seconds", "dynaserve_queue_depth",
+                   "dynaserve_pool_size", "dynaserve_http_requests_total",
+                   "dynaserve_open_requests"):
+        assert needle in text, f"missing {needle}"
+    assert 'outcome="done"' in text
+
+
+def test_trace_spans_recorded(sim_server):
+    _, hdrs, _ = _post(sim_server.port, {"prompt": "trace me",
+                                         "max_tokens": 4})
+    trace_id = hdrs["x-trace-id"]
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        recs = [t for t in sim_server.tracer.finished
+                if t["trace_id"] == trace_id]
+        if recs:
+            break
+        time.sleep(0.01)
+    assert recs, "trace record never surfaced"
+    rec = recs[0]
+    assert rec["outcome"] == "done" and rec["n_tokens"] == 4
+    assert {s["name"] for s in rec["spans"]} >= {"queued", "decode"}
+
+
+def _wait_cancelled(srv, rid, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        state = srv.driver.call(
+            lambda s: (s.req_states[rid].req.state
+                       if rid in s.req_states else None))
+        if state in ("cancelled", "done", None):
+            return state
+        time.sleep(0.02)
+    return "timeout"
+
+
+def test_disconnect_mid_stream_cancels_sim(sim_server):
+    """Client drops the socket mid-SSE: the session must cancel the
+    request (not run out the remaining ~500 tokens) and free all
+    resources."""
+    port = sim_server.port
+    body = json.dumps({"prompt": "disconnect victim", "max_tokens": 500,
+                       "stream": True}).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=30)
+    s.sendall(f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+              f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    buf = b""
+    while b"x-request-id: " not in buf:
+        buf += s.recv(4096)
+    rid = buf.split(b"x-request-id: ")[1].split(b"\r\n")[0].decode()
+    while buf.count(b"data: ") < 2:          # a couple of tokens flowed
+        buf += s.recv(4096)
+    s.close()                                # abrupt disconnect
+    state = _wait_cancelled(sim_server, rid)
+    assert state == "cancelled", f"request ended {state}, not cancelled"
+    # nothing left in flight for this request
+    leftovers = sim_server.driver.call(
+        lambda sess: (len(sess._streams), len(sess._pinned_src),
+                      sum(len(i.prefill_q) + len(i.decode_q)
+                          for i in sess.instances)))
+    assert leftovers == (0, 0, 0)
+    n_tok = sim_server.driver.call(
+        lambda sess: len(sess.req_states[rid].token_times))
+    assert n_tok < 500, "request ran to completion despite disconnect"
+
+
+def test_disconnect_before_first_token_cancels(sim_server):
+    """EOF while the request is still queued/prefilling also cancels."""
+    port = sim_server.port
+    body = json.dumps({"prompt": "x" * 2000, "max_tokens": 400,
+                       "stream": True}).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=30)
+    s.sendall(f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+              f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    time.sleep(0.02)
+    s.close()
+    # find the most recent rid and wait for it to leave flight
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:
+        open_now = sim_server.driver.call(lambda sess: sess._open_requests)
+        if open_now == 0:
+            break
+        time.sleep(0.02)
+    assert sim_server.driver.call(lambda sess: sess._open_requests) == 0
+
+
+# ---------------------------------------------------------------------------
+# per-key admission
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def auth_server():
+    srv = ServingServer(ServerConfig(
+        port=0, backend="sim", retain_finished=True,
+        api_keys={"good-key": KeyQuota(rate=0.001, burst=2,
+                                       max_inflight=8)})).start()
+    yield srv
+    srv.stop()
+
+
+def test_auth_required(auth_server):
+    status, _, body = _post(auth_server.port, {"prompt": "x",
+                                               "max_tokens": 2})
+    assert status == 401
+    assert json.loads(body)["error"]["type"] == "authentication_error"
+    status, _, _ = _post(auth_server.port, {"prompt": "x", "max_tokens": 2},
+                         headers={"Authorization": "Bearer wrong"})
+    assert status == 401
+
+
+def test_rate_limit_429(auth_server):
+    hdr = {"Authorization": "Bearer good-key"}
+    statuses = [_post(auth_server.port, {"prompt": "y", "max_tokens": 2},
+                      headers=hdr)[0] for _ in range(4)]
+    assert statuses[0] == 200 and statuses[1] == 200    # burst of 2
+    assert statuses[2] == 429 and statuses[3] == 429    # bucket dry
+    status, _, body = _post(auth_server.port,
+                            {"prompt": "y", "max_tokens": 2}, headers=hdr)
+    assert json.loads(body)["error"]["type"] == "rate_limit_error"
+
+
+# ---------------------------------------------------------------------------
+# session admission -> 503
+# ---------------------------------------------------------------------------
+def test_session_admission_rejects_503():
+    """With admission on and interactive targets, a storm of huge
+    prompts must produce at least one 503 whose error is OpenAI-shaped."""
+    srv = ServingServer(ServerConfig(
+        port=0, backend="sim", admission=True, retain_finished=True,
+        max_tokens_cap=512, tick_events=4)).start()
+    try:
+        import threading
+        results = []
+        lock = threading.Lock()
+
+        def fire():
+            st, _, bd = _post(srv.port, {
+                "prompt": [7] * 6000, "max_tokens": 32,
+                "slo": "interactive", "stream": False})
+            with lock:
+                results.append((st, bd))
+
+        threads = [threading.Thread(target=fire) for _ in range(12)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        statuses = [st for st, _ in results]
+        assert 503 in statuses, f"no rejection in {statuses}"
+        body = next(bd for st, bd in results if st == 503)
+        assert json.loads(body)["error"]["type"] == "overloaded_error"
+        assert all(st in (200, 503) for st in statuses)
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# engine backend over HTTP (slower: real JAX forward passes)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_server():
+    # tick_events=2: the driver re-checks its command queue every two
+    # session events, so a disconnect-cancel lands mid-decode instead of
+    # after the whole generation drained in one tick
+    srv = ServingServer(ServerConfig(
+        port=0, backend="engine", retain_finished=True,
+        engine_slots=6, engine_max_len=160, tick_events=2)).start()
+    yield srv
+    srv.stop()
+
+
+def test_engine_unary_completion(engine_server):
+    status, _, body = _post(engine_server.port, {
+        "prompt": list(range(1, 17)), "max_tokens": 4})
+    assert status == 200
+    out = json.loads(body)
+    assert out["usage"]["completion_tokens"] == 4
+    toks = [int(t) for t in out["choices"][0]["text"].split()]
+    assert len(toks) == 4                     # real sampled token ids
+
+
+def test_engine_disconnect_mid_stream_cancels(engine_server):
+    """Real engines are slow enough that the disconnect always lands
+    mid-decode: the cancel must free both micro slots."""
+    port = engine_server.port
+    body = json.dumps({"prompt": list(range(1, 25)), "max_tokens": 100,
+                       "stream": True}).encode()
+    s = socket.create_connection(("127.0.0.1", port), timeout=60)
+    s.sendall(f"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+              f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    buf = b""
+    while b"x-request-id: " not in buf:
+        buf += s.recv(4096)
+    rid = buf.split(b"x-request-id: ")[1].split(b"\r\n")[0].decode()
+    while buf.count(b"data: ") < 2:
+        buf += s.recv(4096)
+    s.close()
+    state = _wait_cancelled(engine_server, rid, timeout=60)
+    assert state == "cancelled", f"request ended {state}, not cancelled"
+    slots = engine_server.driver.call(
+        lambda sess: dict(sess.backend._slots))
+    assert not any(rid in k for k in slots), f"leaked slots: {slots}"
+    clean = engine_server.driver.call(lambda sess: (
+        len(sess._streams),
+        all(e.n_free == e.n_slots or sess._open_requests > 0
+            for e in sess.backend.engines.values())))
+    assert clean[0] == 0

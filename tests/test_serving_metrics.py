@@ -1,0 +1,223 @@
+"""Units for the serving observability stack: the shared percentile
+helper, the dependency-free Prometheus registry, the session-observer
+metrics hub, and the span tracer."""
+import json
+import math
+import re
+
+import numpy as np
+import pytest
+
+from repro.core.metrics_util import pctl
+from repro.serving.metrics import (
+    DEFAULT_TTFT_BUCKETS, MetricsRegistry, ServingMetrics,
+)
+from repro.serving.tracing import Tracer
+
+
+# ---------------------------------------------------------------------------
+# pctl: the one percentile helper (empty-array guard included)
+# ---------------------------------------------------------------------------
+def test_pctl_empty_guard():
+    assert pctl([], 99) == 0.0
+    assert pctl([], 99, default=float("inf")) == float("inf")
+    assert pctl(np.array([]), 50) == 0.0
+
+
+def test_pctl_matches_numpy():
+    xs = [3.0, 1.0, 4.0, 1.0, 5.0]
+    for q in (0, 50, 95, 99, 100):
+        assert pctl(xs, q) == pytest.approx(float(np.percentile(xs, q)))
+    assert pctl(np.asarray(xs), 50) == pctl(xs, 50)
+    assert pctl((x for x in xs), 50) == pctl(xs, 50)   # any iterable
+
+
+# ---------------------------------------------------------------------------
+# registry: Prometheus text exposition validity
+# ---------------------------------------------------------------------------
+_LABEL = r'[a-zA-Z0-9_]+="(?:[^"\\]|\\.)*"'
+_SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{' + _LABEL +
+    r'(,' + _LABEL + r')*\})? \S+$')
+
+
+def validate_exposition(text: str) -> None:
+    """Structural validation: HELP/TYPE pairs, sample-line grammar,
+    cumulative histogram buckets with ``+Inf`` == ``_count``."""
+    typed = {}
+    buckets = {}                     # (name, labels-minus-le) -> [counts]
+    counts = {}
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(" ", 3)
+            typed[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        assert _SAMPLE.match(line), f"bad sample line: {line!r}"
+        metric, value = line.rsplit(" ", 1)
+        name, _, labels = metric.partition("{")
+        pairs = dict(re.findall(r'([a-zA-Z0-9_]+)="((?:[^"\\]|\\.)*)"',
+                                labels))
+        if name.endswith("_bucket"):
+            base = name[:-len("_bucket")]
+            le = pairs.pop("le")
+            key = (base, tuple(sorted(pairs.items())))
+            buckets.setdefault(key, []).append(
+                (float("inf") if le == "+Inf" else float(le), int(value)))
+        elif name.endswith("_count"):
+            counts[(name[:-len("_count")],
+                    tuple(sorted(pairs.items())))] = int(value)
+    assert typed, "no TYPE lines"
+    for (base, rest), bs in buckets.items():
+        assert typed.get(base) == "histogram"
+        bs.sort()
+        assert bs[-1][0] == float("inf"), f"{base}: no +Inf bucket"
+        cum = [n for _, n in bs]
+        assert cum == sorted(cum), f"{base}: non-cumulative buckets {cum}"
+        assert counts[(base, rest)] == cum[-1], \
+            f"{base}: _count {counts[(base, rest)]} != +Inf bucket {cum[-1]}"
+
+
+def test_registry_renders_valid_exposition():
+    r = MetricsRegistry()
+    c = r.counter("demo_requests_total", "demo", labels=("route",))
+    g = r.gauge("demo_depth", "demo gauge")
+    h = r.histogram("demo_latency_seconds", "demo hist", labels=("cls",),
+                    buckets=(0.1, 1.0, 10.0))
+    c.inc(route="/a")
+    c.inc(3, route='/with"quote')
+    g.set(7.5)
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        h.observe(v, cls="x")
+    text = r.render()
+    validate_exposition(text)
+    assert 'demo_requests_total{route="/a"} 1' in text
+    assert r'\"quote' in text                      # label value escaping
+    assert 'demo_latency_seconds_bucket{cls="x",le="+Inf"} 5' in text
+    assert 'demo_latency_seconds_count{cls="x"} 5' in text
+    assert "demo_depth 7.5" in text
+
+
+def test_registry_family_reuse_and_conflicts():
+    r = MetricsRegistry()
+    a = r.counter("x_total", "x")
+    assert r.counter("x_total", "x") is a          # idempotent
+    with pytest.raises(ValueError):
+        r.gauge("x_total", "x")                    # type conflict
+    with pytest.raises(ValueError):
+        a.inc(-1)                                  # counters only go up
+    with pytest.raises(ValueError):
+        r.counter("y_total", "y", labels=("a",)).inc(b="nope")
+
+
+# ---------------------------------------------------------------------------
+# the hub, driven by a real sim session
+# ---------------------------------------------------------------------------
+def _sim_session(**cfg_kw):
+    from repro.configs import get_config
+    from repro.core.costmodel import A100, BatchCostModel
+    from repro.core.session import ServeSession, SessionConfig
+    from repro.sim.policies import DynaServePolicy
+    from repro.sim.simulator import SimBackend
+
+    cost = BatchCostModel(get_config("qwen2.5-14b"), A100)
+    return ServeSession(SimBackend(cost), DynaServePolicy(cost, 0.1),
+                        SessionConfig(n_instances=2, slo=0.1, **cfg_kw))
+
+
+def test_hub_observes_session_lifecycle():
+    from repro.core.request import INTERACTIVE
+    sess = _sim_session()
+    hub = ServingMetrics()
+    sess.observers.append(hub)
+    h1 = sess.generate(prompt_len=64, decode_len=6, slo=INTERACTIVE)
+    h2 = sess.generate(prompt_len=32, decode_len=4)
+    h1.result(), h2.result()
+    hub.sample(sess)
+    assert hub.requests.value(slo_class="interactive", outcome="done") == 1
+    assert hub.tokens.value(slo_class="interactive") == 6
+    assert hub.ttft.count_of(slo_class="interactive") == 1
+    assert hub.tbt.count_of(slo_class="interactive") == 5   # n_tokens - 1
+    assert hub.open_requests.value() == 0
+    validate_exposition(hub.render())
+    # TTFT buckets span the sim's observed latencies
+    assert DEFAULT_TTFT_BUCKETS[0] < 1.0
+
+
+def test_hub_counts_cancelled_and_backend_gauges():
+    sess = _sim_session()
+    hub = ServingMetrics()
+    sess.observers.append(hub)
+    h = sess.generate(prompt_len=512, decode_len=64)
+    for i, _ in enumerate(h):
+        if i == 2:
+            h.cancel()
+    assert hub.requests.value(slo_class="default", outcome="cancelled") == 1
+    hub.sample(sess)
+    text = hub.render()
+    assert "dynaserve_backend" in text or sess.backend.gauges(0) == {}
+
+
+def test_backend_gauges_paged_sim():
+    from repro.configs import get_config
+    from repro.core.costmodel import A100, BatchCostModel
+    from repro.sim.simulator import SimBackend
+
+    cost = BatchCostModel(get_config("qwen2.5-14b"), A100)
+    be = SimBackend(cost, page_size=32, pages_per_instance=128)
+    be.spawn(0)
+    g = be.gauges(0)
+    assert g["kv_pages_total"] == 128
+    assert g["kv_pages_free"] == 128
+    assert g["kv_pages_inflight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+class _FakeReq:
+    def __init__(self, rid, slo=None):
+        self.rid = rid
+        self.slo = slo
+
+
+def test_tracer_spans_cover_lifecycle(tmp_path):
+    path = tmp_path / "spans.jsonl"
+    tr = Tracer(sink=str(path))
+    r = _FakeReq("r1")
+    tr.on_request(r, 0.0)
+    tr.register("r1", "trace-abc")
+    tr.on_transition(r, "queued", "admitted", 0.5)
+    tr.on_transition(r, "admitted", "running_alpha", 1.0)
+    tr.on_token(r, 1.5)
+    tr.on_transition(r, "running_alpha", "handoff", 2.0)
+    tr.on_transition(r, "handoff", "running_beta", 2.5)
+    tr.on_token(r, 3.0)
+    tr.on_transition(r, "running_beta", "done", 3.5)
+    rec = json.loads(path.read_text().splitlines()[0])
+    assert rec["trace_id"] == "trace-abc"
+    assert rec["outcome"] == "done" and rec["n_tokens"] == 2
+    spans = {s["name"]: s for s in rec["spans"]}
+    assert spans["queued"]["dur"] == 0.5
+    assert spans["scheduled"]["dur"] == 0.5
+    assert spans["prefill"]["start"] == 1.0
+    assert spans["prefill"]["end"] == 1.5          # first token wins
+    assert spans["handoff"]["dur"] == 0.5
+    assert spans["decode"]["end"] == 3.5
+    assert not tr._live                            # state pruned
+    assert tr.finished[-1]["rid"] == "r1"
+
+
+def test_tracer_traces_real_session():
+    sess = _sim_session()
+    tr = Tracer()
+    sess.observers.append(tr)
+    h = sess.generate(prompt_len=256, decode_len=8)
+    h.result()
+    rec = tr.finished[-1]
+    assert rec["outcome"] == "done" and rec["n_tokens"] == 8
+    names = [s["name"] for s in rec["spans"]]
+    assert "queued" in names and "decode" in names
+    for s in rec["spans"]:
+        assert s["dur"] >= 0 and not math.isnan(s["start"])
