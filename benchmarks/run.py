@@ -32,6 +32,7 @@ MODULES = [
     "elastic_shift",
     "online_serving",
     "prefix_reuse",
+    "quantized_kv",
     "http_serving",
     "kernel_bench",
     "roofline",

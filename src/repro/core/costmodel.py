@@ -157,10 +157,23 @@ class BatchCostModel:
         return max(0, int(m))
 
     # transfer ----------------------------------------------------------
-    def kv_transfer_bytes(self, n_tokens: int) -> float:
+    def kv_bytes_per_tok_at(self, precision=None) -> float:
+        """Per-context-token KV bytes when the cache stores ``precision``
+        (None/bf16 -> the model-dtype figure).  Quantized formats ship
+        1-byte codes plus k+v per-token f32 dequant scales per attention
+        layer, which is what shrinks handoff streams and page HBM."""
+        from repro.core.precision import get_precision
+        prec = get_precision(precision)
+        if not prec.quantized:
+            return self.kv_bytes_per_tok
+        cfg = self.cfg
+        per_layer = 2 * cfg.n_kv_heads * cfg.hd * prec.itemsize + 2 * 4
+        return per_layer * self.attn_layers
+
+    def kv_transfer_bytes(self, n_tokens: int, precision=None) -> float:
         """Bytes of KV/state shipped for a handoff covering ``n_tokens``."""
         eff = self.effective_ctx(n_tokens)
-        return self.kv_bytes_per_tok * eff + self.state_bytes
+        return self.kv_bytes_per_tok_at(precision) * eff + self.state_bytes
 
-    def kv_transfer_time(self, n_tokens: int) -> float:
-        return self.kv_transfer_bytes(n_tokens) / self.hw.link_bw
+    def kv_transfer_time(self, n_tokens: int, precision=None) -> float:
+        return self.kv_transfer_bytes(n_tokens, precision) / self.hw.link_bw

@@ -29,9 +29,17 @@ class ChunkTransferPlan:
 
 def plan_chunked_transfer(cost: BatchCostModel, n_tokens: int,
                           chunk_tokens: int = 512,
-                          t0: float = 0.0) -> ChunkTransferPlan:
+                          t0: float = 0.0,
+                          kv_bytes_per_tok: float = None) -> ChunkTransferPlan:
     """Alpha computes ``n_tokens`` of prefill in chunks; each finished
-    chunk is DMA-pushed while the next chunk computes."""
+    chunk is DMA-pushed while the next chunk computes.
+
+    ``kv_bytes_per_tok`` overrides the cost model's bf16 per-token KV
+    figure — quantized page pools ship ~half the bytes per chunk
+    (``cost.kv_bytes_per_tok_at(precision)``), shrinking both link
+    occupancy and the exposed stall."""
+    if kv_bytes_per_tok is None:
+        kv_bytes_per_tok = cost.kv_bytes_per_tok
     if n_tokens <= 0:
         return ChunkTransferPlan(chunk_tokens, 0, t0, t0, 0.0, 0.0, [])
     chunks: List[int] = []
@@ -49,7 +57,7 @@ def plan_chunked_transfer(cost: BatchCostModel, n_tokens: int,
         # compute time of this chunk on alpha
         ready += cost.latency([WorkItem("prefill", c, ctx)])
         ctx += c
-        b = cost.kv_bytes_per_tok * c
+        b = kv_bytes_per_tok * c
         total_bytes += b
         start = max(ready, link_free)
         end = start + b / cost.hw.link_bw
@@ -96,7 +104,7 @@ def plan_background_stream(t0: float, ready: float, nbytes: float,
 
 
 def monolithic_exposed(cost: BatchCostModel, n_tokens: int,
-                       t0: float = 0.0) -> float:
+                       t0: float = 0.0, precision=None) -> float:
     """Baseline: ship the whole KV after prefill completes (what vanilla
     PD disaggregation does) — the entire transfer is exposed."""
-    return cost.kv_transfer_bytes(n_tokens) / cost.hw.link_bw
+    return cost.kv_transfer_bytes(n_tokens, precision) / cost.hw.link_bw

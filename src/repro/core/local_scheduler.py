@@ -171,7 +171,9 @@ class LocalScheduler:
                    free_pages: Optional[int] = None,
                    page_size: Optional[int] = None,
                    n_inflight: int = 0,
-                   inflight_latency: float = 0.0) -> BatchPlan:
+                   inflight_latency: float = 0.0,
+                   free_frames: Optional[int] = None,
+                   frames_of=None) -> BatchPlan:
         """Compose one unified batch.
 
         With ``free_pages``/``page_size`` (a paged-KV backend) the batch
@@ -180,6 +182,14 @@ class LocalScheduler:
         grant is capped to the pages left.  Work that does not fit is
         *deferred* (it stays queued; ``plan.starved`` tells the session)
         rather than overflowing the pool mid-batch.
+
+        Under mixed-precision KV the pool is denominated in *frames*
+        (one frame = one 1-byte-itemsize page; a bf16 page costs 2, a
+        quantized page 1): pass ``free_frames`` plus ``frames_of`` (rid
+        -> frames one of that request's pages costs) and the same
+        boundary/cap logic charges per-request frame prices, so
+        quantized streams stretch the pool 2x.  Without them the page
+        path is the frames path at uniform price 1 — identical plans.
 
         ``n_inflight``/``inflight_latency`` describe batches already
         dispatched ahead (pipelined execution): the device serializes
@@ -192,19 +202,23 @@ class LocalScheduler:
         two full SLO budgets per token.  Defaults (0, 0.0 — the
         synchronous loop) keep the original budget.
         """
-        mem_aware = free_pages is not None and bool(page_size)
+        mem_aware = (free_frames is not None or free_pages is not None) \
+            and bool(page_size)
+        if frames_of is None:
+            frames_of = lambda rid: 1  # noqa: E731 — uniform page price
         starved = False
         decodes: List[DecodeWork] = []
-        budget_pages = free_pages if mem_aware else 0
+        budget_frames = (free_frames if free_frames is not None
+                         else free_pages) if mem_aware else 0
         for d in decode_queue[: self.max_batch_requests]:
             if mem_aware:
                 # appending this stream's next token needs a fresh page
                 # exactly when its context fills the current one
-                need = 1 if d.ctx % page_size == 0 else 0
-                if need > budget_pages:
+                need = frames_of(d.rid) if d.ctx % page_size == 0 else 0
+                if need > budget_frames:
                     starved = True
                     continue
-                budget_pages -= need
+                budget_frames -= need
             decodes.append(d)
         d_ctx = int(sum(d.ctx for d in decodes) / max(1, len(decodes)))
         p_ctx = max((w.ctx for w in prefill_queue), default=0)
@@ -235,9 +249,11 @@ class LocalScheduler:
             paid = min(w.remaining - free_head, budget)
             g = free_head + paid
             if mem_aware:
+                fw = frames_of(w.rid)
                 slack = pages_for(w.ctx + free_head, page_size) * \
                     page_size - (w.ctx + free_head)
-                g_mem = free_head + slack + budget_pages * page_size
+                g_mem = free_head + slack + \
+                    (budget_frames // fw) * page_size
                 if g > g_mem:
                     g = g_mem
                     starved = True
@@ -248,8 +264,9 @@ class LocalScheduler:
                                    w.remaining - free_head):
                 break
             if mem_aware:
-                budget_pages -= pages_for(w.ctx + g, page_size) - \
-                    pages_for(w.ctx + free_head, page_size)
+                budget_frames -= (pages_for(w.ctx + g, page_size) -
+                                  pages_for(w.ctx + free_head,
+                                            page_size)) * fw
             grants.append((w, g))
             cached_total += min(free_head, g)
             budget -= max(0, g - free_head)

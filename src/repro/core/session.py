@@ -366,6 +366,35 @@ class Backend:
         """Page-pool capacity of the instance (None = unbounded)."""
         return None
 
+    # ---- per-page KV precision (quantized page pools) ----
+    # The pool is denominated in *frames*: one frame = one page of a
+    # 1-byte-itemsize format, so a bf16 page costs 2 frames and a
+    # quantized (fp8/int8) page 1.  Under a uniform precision every
+    # frame inequality is the page inequality scaled by a constant, so
+    # backends without quantization see identical decisions; mixed
+    # precision lets quantized requests stretch the same HBM 2x.
+    def pool_precision(self, iid: int):
+        """Storage format of the instance's page pool."""
+        from repro.core.precision import BF16
+        return BF16
+
+    def request_precision(self, iid: int, slo_name: Optional[str]):
+        """Format pages of a request in SLO class ``slo_name`` get on
+        the instance (policy-aware backends map BATCH -> quantized)."""
+        return self.pool_precision(iid)
+
+    def free_frames(self, iid: int) -> Optional[int]:
+        free = self.free_pages(iid)
+        if free is None:
+            return None
+        return free * self.pool_precision(iid).frames
+
+    def total_frames(self, iid: int) -> Optional[int]:
+        total = self.total_pages(iid)
+        if total is None:
+            return None
+        return total * self.pool_precision(iid).frames
+
     def on_preempt(self, micro: MicroState) -> None:
         """Drop the micro's resident KV (pages); the session re-queues
         the work as a recompute prefill."""
@@ -1005,11 +1034,13 @@ class ServeSession:
             m.shared_pages = 0
             resident = resident_kv(m)
             if resident > 0:
-                nbytes = self.cost.kv_transfer_bytes(resident)
+                mprec = self.backend.request_precision(
+                    src_iid, getattr(m.mr.parent.slo, "name", None))
+                nbytes = self.cost.kv_transfer_bytes(resident, mprec)
                 self.migration_bytes += nbytes
                 self.transfer_bytes += nbytes
                 if self.backend.virtual_clock:
-                    delay = self.cost.kv_transfer_time(resident)
+                    delay = self.cost.kv_transfer_time(resident, mprec)
                     m.ready = max(m.ready, self.now + delay)
                     self.transfer_exposed += delay
             m.iid = dst_iid
@@ -1104,46 +1135,61 @@ class ServeSession:
         return best
 
     def kv_pressure(self, iid: int) -> float:
-        """Fraction of the instance's KV page pool in use — the memory
-        signal admission control and the elastic controller consume
-        (0.0 for dense/unbounded backends)."""
-        total = self.backend.total_pages(iid)
+        """Fraction of the instance's KV pool in use, denominated in
+        frames so quantized pages weigh their true HBM share — the
+        memory signal admission control and the elastic controller
+        consume (0.0 for dense/unbounded backends).  With a uniform
+        pool precision this is exactly the page ratio."""
+        total = self.backend.total_frames(iid)
         if not total:
             return 0.0
-        free = self.backend.free_pages(iid)
+        free = self.backend.free_frames(iid)
         if free is None:
             return 0.0
         return 1.0 - free / total
 
-    def _kv_committed_pages(self, inst: InstanceState) -> int:
-        """Pages the instance's placed micro-requests will eventually
-        occupy (each micro grows to its span end).  Pages borrowed from
-        the shared-prefix cache are counted ONCE — each micro's
-        commitment excludes its claimed pages and the distinct pinned
-        set is added back.  Computed from the session's own queues +
-        the backend's trie (identical on both substrates), so every
-        admission decision built on it is byte-identical on the
-        simulator and on real engines regardless of clock semantics."""
+    def _page_frames(self, iid: int, slo) -> int:
+        """Frames one page of a request in SLO class ``slo`` costs on
+        the instance (the backend's precision policy sets the format)."""
+        name = slo.name if slo is not None else None
+        return self.backend.request_precision(iid, name).frames
+
+    def _kv_committed_frames(self, inst: InstanceState) -> int:
+        """Frames the instance's placed micro-requests will eventually
+        occupy (each micro grows to its span end), each priced at its
+        request's page precision.  Pages borrowed from the shared-prefix
+        cache are counted ONCE — each micro's commitment excludes its
+        claimed pages and the distinct pinned set is added back (at the
+        pool's precision; engine pools are uniform so this is exact).
+        Computed from the session's own queues + the backend's trie
+        (identical on both substrates), so every admission decision
+        built on it is byte-identical on the simulator and on real
+        engines regardless of clock semantics."""
         psize = self.backend.page_size
-        base = sum(pages_for(m.mr.end, psize) - m.shared_pages
+        base = sum((pages_for(m.mr.end, psize) - m.shared_pages)
+                   * self._page_frames(inst.iid, m.mr.parent.slo)
                    for m in inst.prefill_q + inst.decode_q)
-        return base + self.backend.pinned_prefix_pages(inst.iid)
+        return base + self.backend.pinned_prefix_pages(inst.iid) \
+            * self.backend.pool_precision(inst.iid).frames
 
     def _kv_admit(self, r: Request) -> bool:
-        """Page-pool admission: shed the request when no instance can
-        commit enough pages for its predicted footprint (prompt +
-        predicted decode, rounded up to pages; pages the instance
-        already caches for this prompt's prefix don't count — they
-        would be claimed, not allocated)."""
+        """Frame-pool admission: shed the request when no instance can
+        commit enough frames for its predicted footprint (prompt +
+        predicted decode, rounded up to pages and priced at the
+        request's page precision; pages the instance already caches for
+        this prompt's prefix don't count — they would be claimed, not
+        allocated)."""
         psize = self.backend.page_size
         if not psize:
             return True
         need = pages_for(r.P + r.D_pred, psize)
         for inst in (self.active_instances() or self.pool_instances()):
-            total = self.backend.total_pages(inst.iid)
+            total = self.backend.total_frames(inst.iid)
             hit = self.backend.cached_prefix(inst.iid, r) // psize
+            fp = self._page_frames(inst.iid, r.slo)
             if total is None or \
-                    total - self._kv_committed_pages(inst) >= need - hit:
+                    total - self._kv_committed_frames(inst) >= \
+                    (need - hit) * fp:
                 return True
         return False
 
@@ -1283,13 +1329,20 @@ class ServeSession:
         for m in dc:
             tbt, _ = self._work_meta(m)
             dworks.append(DecodeWork(m.rid, m.pos, tbt=tbt))
+        # page budgeting runs in frames: each micro's pages are priced
+        # at its request's precision, so quantized streams stretch the
+        # pool (uniform precision degenerates to plain page counting)
+        slos = {m.rid: m.mr.parent.slo for m in pf + dc}
         plan = inst.scheduler.next_batch(
             pworks, dworks, free_pages=self.backend.free_pages(inst.iid),
             page_size=self.backend.page_size,
             n_inflight=sum(len(h.decs) for h in inst.inflight),
             inflight_latency=sum(
                 getattr(h.plan, "predicted_latency", 0.0)
-                for h in inst.inflight))
+                for h in inst.inflight),
+            free_frames=self.backend.free_frames(inst.iid),
+            frames_of=lambda rid: self._page_frames(inst.iid,
+                                                    slos.get(rid)))
         return plan, pf, dc
 
     def _seniority(self, m: MicroState):
@@ -1591,12 +1644,13 @@ class ServeSession:
         # state ships at all.
         if psize and beta.pos > 0:
             inst = self.instances[beta.iid]
-            need = pages_for(beta.pos, psize) - beta.shared_pages
+            need = (pages_for(beta.pos, psize) - beta.shared_pages) \
+                * self._page_frames(beta.iid, beta.mr.parent.slo)
             guard = self._seniority(beta)
-            free = self.backend.free_pages(beta.iid)
+            free = self.backend.free_frames(beta.iid)
             while (free is not None and free < need
                    and self._preempt_for_memory(inst, junior_to=guard)):
-                free = self.backend.free_pages(beta.iid)
+                free = self.backend.free_frames(beta.iid)
             if free is not None and free < need and inst.role != "decode":
                 # (a decode-only instance cannot recompute a prefix; its
                 # import proceeds and may raise the typed OutOfPages)
@@ -1616,8 +1670,13 @@ class ServeSession:
         # accounting exactly — only when they land differs.
         if self._overlap:
             if self.backend.virtual_clock and beta.pos > 0 and ready > self.now:
-                chunk_bytes = (self.cost.kv_bytes_per_tok
-                               * max(1, self.cfg.stream_chunk_tokens))
+                # chunk sizing follows the *source* pool's wire format:
+                # quantized pages ship ~half the bytes per chunk token
+                src_iid = src.iid if src is not None else beta.iid
+                chunk_bytes = (self.cost.kv_bytes_per_tok_at(
+                    self.backend.request_precision(
+                        src_iid, getattr(beta.mr.parent.slo, "name", None)))
+                    * max(1, self.cfg.stream_chunk_tokens))
                 stream = TransferStream(
                     beta=beta, t_ready=ready, exposed=exposed,
                     nbytes=nbytes,
@@ -1792,7 +1851,9 @@ class ServeSession:
         for inst in self.instances:
             mfu.append(inst.flops_done / max(duration, 1e-9) / self.cost.hw.peak_flops)
             hbm.append(min(1.0, (self.cost.weight_bytes +
-                                 inst.kv_tokens_resident * self.cost.kv_bytes_per_tok)
+                                 inst.kv_tokens_resident *
+                                 self.cost.kv_bytes_per_tok_at(
+                                     self.backend.pool_precision(inst.iid)))
                            / self.cfg.hbm_bytes))
             busy.append(inst.busy_time / max(duration, 1e-9))
             inst_seconds += inst.active_seconds(duration)

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.costmodel import A100, BatchCostModel, HardwareSpec
+from repro.core.precision import get_precision
 from repro.core.request import Request
 from repro.core.session import (
     Backend, ExecResult, HandoffStreamError, InstanceState, MicroState,
@@ -75,16 +76,20 @@ class _KVStream:
 
     def __init__(self, backend: "EngineBackend", src_eng: InstanceEngine,
                  dst_eng: InstanceEngine, src_slot: int, dst_slot: int,
-                 src: MicroState, dst: MicroState, start: int):
+                 src: MicroState, dst: MicroState, start: int,
+                 dst_iid: int):
         self.backend = backend
         self.src_eng = src_eng
         self.dst_eng = dst_eng
         self.src_slot = src_slot
         self.dst_slot = dst_slot
+        self.dst_iid = dst_iid
         self.src = src
         self.dst = dst
         self.upto = src.pos
         self.total_bytes = backend._transfer_bytes(src_eng, src.pos,
+                                                   start=start)
+        self.saved_bytes = backend._transfer_saved(src_eng, src.pos,
                                                    start=start)
         self.sent = 0.0
         self._gen = src_eng.export_state_iter(
@@ -107,10 +112,13 @@ class _KVStream:
         self.dst_eng.import_state(self.dst_slot, [piece])
         if self._next_piece is None:
             nb = self.total_bytes - self.sent
+            # stream complete: credit the quantization wire savings
+            self.backend._credit_saved(self.dst_iid, self.saved_bytes)
         else:
             lo, hi = piece["span"]
             nb = min(self.total_bytes - self.sent,
-                     (hi - lo) * self.backend.cost.kv_bytes_per_tok)
+                     (hi - lo) * self.backend.cost.kv_bytes_per_tok_at(
+                         self.src_eng.kv_precision))
         self.sent += nb
         self.backend.kv_bytes_moved += int(nb)
         return float(nb)
@@ -132,7 +140,8 @@ class EngineBackend(Backend):
                  kv_mode: str = "auto", page_size: int = 8,
                  n_pages: Optional[int] = None,
                  max_chunk: int = DEFAULT_MAX_CHUNK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 kv_precision="bf16"):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -155,7 +164,28 @@ class EngineBackend(Backend):
         self.records: Dict[str, _ReqRecord] = {}
         self._slots: Dict[str, Tuple[int, int]] = {}   # micro rid -> (iid, slot)
         self.kv_bytes_moved = 0
+        # per-page KV precision: a single spec for every instance, or a
+        # dict/sequence mapping instance id -> format for heterogeneous
+        # pools (e.g. a bf16 interactive pool next to an fp8 batch pool)
+        self.kv_precision = kv_precision
+        self.handoff_bytes_saved = 0
+        self.handoff_saved_by_iid: Dict[int, int] = {}
         self._rng = np.random.default_rng(seed)
+
+    def _precision_for(self, iid: int):
+        spec = self.kv_precision
+        if isinstance(spec, dict):
+            spec = spec.get(iid, spec.get("default", "bf16"))
+        elif isinstance(spec, (list, tuple)):
+            spec = spec[iid % len(spec)]
+        return get_precision(spec)
+
+    def _credit_saved(self, iid: int, nbytes: int) -> None:
+        if nbytes <= 0:
+            return
+        self.handoff_bytes_saved += int(nbytes)
+        self.handoff_saved_by_iid[iid] = \
+            self.handoff_saved_by_iid.get(iid, 0) + int(nbytes)
 
     # ---------------- pool lifecycle ----------------
     def spawn(self, iid: int) -> None:
@@ -164,7 +194,8 @@ class EngineBackend(Backend):
                 self.cfg, self.params, self.n_slots, self.max_len,
                 kv_mode=self.kv_mode,
                 page_size=self.page_size or 8, n_pages=self.n_pages,
-                max_chunk=self.max_chunk, prefix_cache=self.prefix_cache)
+                max_chunk=self.max_chunk, prefix_cache=self.prefix_cache,
+                kv_precision=self._precision_for(iid).name)
             # the engine owns the auto-mode rule; the backend's page
             # bookkeeping (register/admission/total_pages) must agree
             assert eng.paged == self.paged, \
@@ -183,9 +214,16 @@ class EngineBackend(Backend):
     def total_pages(self, iid: int) -> Optional[int]:
         return self.n_pages
 
+    def pool_precision(self, iid: int):
+        eng = self.engines.get(iid)
+        if eng is not None:
+            return eng.kv_precision
+        return self._precision_for(iid)
+
     def gauges(self, iid: int) -> Dict[str, float]:
         """Engine-side occupancy sample for /metrics: slot and KV-page
-        utilisation plus prefix-cache size, per instance."""
+        utilisation, per-precision page occupancy, quantized-handoff
+        savings, plus prefix-cache size, per instance."""
         eng = self.engines.get(iid)
         if eng is None:
             return {}
@@ -196,6 +234,14 @@ class EngineBackend(Backend):
         if self.paged:
             out["kv_pages_free"] = float(eng.free_pages)
             out["kv_pages_total"] = float(self.n_pages)
+            prec = eng.kv_precision
+            out["kv_frames_free"] = float(eng.free_pages * prec.frames)
+            out["kv_frames_total"] = float(self.n_pages * prec.frames)
+            if eng.allocator is not None:
+                for name, n in eng.allocator.used_by_precision().items():
+                    out[f"kv_pages_used_{name}"] = float(n)
+            out["handoff_bytes_saved"] = \
+                float(self.handoff_saved_by_iid.get(iid, 0))
         if eng.prefix is not None:
             out["prefix_cache_pages"] = float(eng.prefix.n_pages)
             out["prefix_pinned_pages"] = float(eng.prefix.pinned_pages)
@@ -367,6 +413,15 @@ class EngineBackend(Backend):
             return int(eng.state_bytes(upto, start=start))
         return int(self.cost.kv_transfer_bytes(upto))
 
+    def _transfer_saved(self, eng: InstanceEngine, upto: int,
+                        start: int = 0) -> int:
+        """Wire bytes a quantized pool's handoff avoided relative to
+        shipping the same span at bf16 (0 for unquantized pools)."""
+        if not eng.paged or not eng.kv_precision.quantized:
+            return 0
+        return int(eng.state_bytes(upto, start=start, as_precision="bf16")
+                   - eng.state_bytes(upto, start=start))
+
     def do_handoff(self, src: MicroState, dst: MicroState) -> float:
         """Chunk-wise KV/state handoff from the finished alpha to its
         beta (paper §4.3), on actual cache arrays.  When the session
@@ -387,6 +442,8 @@ class EngineBackend(Backend):
         dst.pos = src.pos
         nbytes = self._transfer_bytes(src_eng, src.pos, start=start)
         self.kv_bytes_moved += nbytes
+        self._credit_saved(di, self._transfer_saved(src_eng, src.pos,
+                                                    start=start))
         return float(nbytes)
 
     def handoff_stream(self, src: MicroState,
@@ -407,7 +464,8 @@ class EngineBackend(Backend):
         if start >= src.pos:
             dst.pos = max(dst.pos, src.pos)
             return None
-        return _KVStream(self, src_eng, dst_eng, ss, ds, src, dst, start)
+        return _KVStream(self, src_eng, dst_eng, ss, ds, src, dst, start,
+                         dst_iid=di)
 
     def stream_pump(self, stream: _KVStream) -> Optional[float]:
         try:
@@ -437,6 +495,8 @@ class EngineBackend(Backend):
                 return False
             self.kv_bytes_moved += self._transfer_bytes(
                 self.engines[old_iid], micro.pos)
+            self._credit_saved(dst_iid, self._transfer_saved(
+                self.engines[old_iid], micro.pos))
         self.engines[old_iid].free(old_slot)
         self._slots[micro.rid] = (dst_iid, new_slot)
         return True

@@ -43,11 +43,14 @@ load-shedding path can catch them precisely instead of eating a raw
 """
 from __future__ import annotations
 
-from typing import Callable, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.paging import pages_for  # noqa: F401  (re-exported)
+from repro.core.precision import (
+    CODE_PRECISIONS, PRECISION_CODES, get_precision,
+)
 
 
 class CapacityError(RuntimeError):
@@ -61,12 +64,21 @@ class OutOfPages(CapacityError):
 class BlockAllocator:
     """Refcounted free-list page allocator + per-slot block tables."""
 
-    def __init__(self, n_pages: int, page_size: int, n_slots: int):
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 precision: str = "bf16"):
         if n_pages <= 0 or page_size <= 0:
             raise ValueError(f"need positive pool: {n_pages=} {page_size=}")
         self.n_pages = n_pages
         self.page_size = page_size
         self.n_slots = n_slots
+        # Per-page precision tags (int8 codes of repro.core.precision):
+        # this engine's physical pool stores one uniform format, so
+        # every live page carries the pool tag; tags travel with COW
+        # forks and reset on the page's last release so a stale tag can
+        # never describe a recycled page.
+        self.precision = get_precision(precision)
+        self._pool_code = PRECISION_CODES[self.precision.name]
+        self._tags = np.full(n_pages, self._pool_code, np.int8)
         self._free: List[int] = list(range(n_pages))
         self._ref: List[int] = [0] * n_pages
         self._tables: List[List[int]] = [[] for _ in range(n_slots)]
@@ -111,6 +123,19 @@ class BlockAllocator:
     def ref_of(self, page: int) -> int:
         return self._ref[page]
 
+    def precision_of(self, page: int) -> str:
+        """Precision tag of one page (pool format for live pages)."""
+        return CODE_PRECISIONS[int(self._tags[page])]
+
+    def used_by_precision(self) -> Dict[str, int]:
+        """Live page counts per precision tag (metrics gauges)."""
+        out: Dict[str, int] = {}
+        for p, r in enumerate(self._ref):
+            if r > 0:
+                name = CODE_PRECISIONS[int(self._tags[p])]
+                out[name] = out.get(name, 0) + 1
+        return out
+
     def can_fit(self, slot: int, new_len: int) -> bool:
         need = pages_for(new_len, self.page_size) - len(self._tables[slot])
         return need <= len(self._free)
@@ -119,6 +144,7 @@ class BlockAllocator:
     def _alloc_page(self) -> int:
         p = self._free.pop()
         self._ref[p] = 1
+        self._tags[p] = self._pool_code
         return p
 
     def _reclaim(self, need: int) -> None:
@@ -175,6 +201,7 @@ class BlockAllocator:
         for i in fork_idx:
             old = table[i]
             new = self._alloc_page()
+            self._tags[new] = self._tags[old]   # forks keep the precision
             self._ref[old] -= 1          # shared => never reaches 0 here
             table[i] = new
             self._set(slot, i, new)
@@ -225,6 +252,7 @@ class BlockAllocator:
         self._ref[page] -= 1
         if self._ref[page] == 0:
             self._free.append(page)
+            self._tags[page] = self._pool_code
             return True
         return False
 
@@ -269,12 +297,20 @@ class BlockAllocator:
         * the free list holds exactly the zero-ref pages;
         * with ``cache_refs`` (``PrefixCache.page_refcounts``), every
           page's refcount equals its table references + cache
-          references.
+          references;
+        * every page (live or free) carries this pool's precision tag —
+          a mixed-precision cluster stores each format in its own
+          physical pool, so a foreign tag means cross-pool corruption.
         Raises ``AssertionError`` — wire it behind a debug flag.
         """
         live = sum(1 for r in self._ref if r > 0)
         assert self.used_pages == live, \
             f"used_pages {self.used_pages} != {live} uniquely-referenced"
+        bad_tags = [p for p in range(self.n_pages)
+                    if int(self._tags[p]) != self._pool_code]
+        assert not bad_tags, \
+            f"pages {bad_tags[:8]} tagged foreign precision in a " \
+            f"{self.precision.name} pool"
         assert sorted(self._free) == \
             [p for p, r in enumerate(self._ref) if r == 0], \
             "free list out of sync with refcounts"

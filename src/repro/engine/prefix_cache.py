@@ -54,16 +54,23 @@ def _chunks(tokens, page_size: int) -> Iterator[bytes]:
 
 
 class _Node:
-    __slots__ = ("key", "page", "parent", "children", "pins", "last_access")
+    __slots__ = ("key", "page", "parent", "children", "pins", "last_access",
+                 "precision")
 
     def __init__(self, key: Optional[bytes], page: Optional[int],
-                 parent: Optional["_Node"]):
+                 parent: Optional["_Node"],
+                 precision: Optional[str] = None):
         self.key = key
         self.page = page
         self.parent = parent
         self.children: Dict[bytes, "_Node"] = {}
         self.pins = 0
         self.last_access = 0
+        # storage format of the indexed page ("bf16"/"fp8"/"int8");
+        # None = untagged (uniform-precision pools never filter on it).
+        # A shared page keeps ONE precision for its whole cache life —
+        # claimants of another format miss instead of dequantizing.
+        self.precision = precision
 
 
 @dataclasses.dataclass
@@ -119,7 +126,8 @@ class PrefixCache:
 
     # ---------------- matching ----------------
     def _walk(self, tokens, max_pages: Optional[int] = None,
-              touch: bool = False) -> List[_Node]:
+              touch: bool = False,
+              precision: Optional[str] = None) -> List[_Node]:
         out: List[_Node] = []
         node = self.root
         for key in _chunks(tokens, self.page_size):
@@ -127,6 +135,13 @@ class PrefixCache:
                 break
             child = node.children.get(key)
             if child is None:
+                break
+            # precision filter: a claimant can only splice pages stored
+            # in ITS format — the walk stops at the first mismatch
+            # (None on either side is a wildcard: untagged nodes and
+            # precision-blind probes keep the pre-quantization paths)
+            if precision is not None and child.precision is not None \
+                    and child.precision != precision:
                 break
             out.append(child)
             node = child
@@ -136,20 +151,24 @@ class PrefixCache:
                 n.last_access = t
         return out
 
-    def match_len(self, tokens) -> int:
+    def match_len(self, tokens, precision: Optional[str] = None) -> int:
         """Longest cached prefix of ``tokens`` in tokens (page-aligned).
         A pure probe: does not touch recency, so schedulers may score
         every instance without perturbing eviction order."""
-        return len(self._walk(tokens)) * self.page_size
+        return len(self._walk(tokens, precision=precision)) \
+            * self.page_size
 
-    def claim(self, tokens, max_tokens: Optional[int] = None) -> Claim:
+    def claim(self, tokens, max_tokens: Optional[int] = None,
+              precision: Optional[str] = None) -> Claim:
         """Match-and-pin the longest cached prefix (optionally capped to
-        ``max_tokens``, rounded *down* to whole pages).  The claimed
-        pages must be spliced into the claimant's block table; call
+        ``max_tokens``, rounded *down* to whole pages; restricted to
+        pages stored at ``precision`` when given).  The claimed pages
+        must be spliced into the claimant's block table; call
         ``release`` when the claimant frees its slot."""
         max_pages = None if max_tokens is None else \
             max(0, int(max_tokens)) // self.page_size
-        nodes = self._walk(tokens, max_pages=max_pages, touch=True)
+        nodes = self._walk(tokens, max_pages=max_pages, touch=True,
+                           precision=precision)
         for n in nodes:
             n.pins += 1
             if n.pins == 1:
@@ -166,13 +185,21 @@ class PrefixCache:
 
     # ---------------- insertion ----------------
     def insert(self, tokens,
-               pages: Optional[Sequence[int]] = None) -> List[int]:
+               pages: Optional[Sequence[int]] = None,
+               precision: Optional[str] = None) -> List[int]:
         """Index the full pages of ``tokens``: ``pages[i]`` is the
         physical page holding chunk ``i``'s KV.  Existing nodes are kept
         (their page already holds identical KV — the duplicate stays
         with the releasing slot and is freed normally); returns the page
         ids of *newly created* nodes, which the caller must retain
         (``BlockAllocator.retain``) so they outlive the inserting slot.
+
+        ``precision`` tags newly created nodes with the storage format
+        of the indexed pages; an existing node KEEPS its original tag
+        (one precision per shared page for its whole cache life).  An
+        insert at a different precision stops at the first such node —
+        chaining a bf16 child under a quantized parent would let a
+        claim walk across formats.
 
         ``pages=None`` (the simulator) auto-assigns virtual ids — the
         trie *shape* is what must match the engine, not the id values.
@@ -184,10 +211,13 @@ class PrefixCache:
             child = node.children.get(key)
             if child is None:
                 page = next(self._virtual) if pages is None else int(pages[i])
-                child = _Node(key, page, node)
+                child = _Node(key, page, node, precision=precision)
                 node.children[key] = child
                 self._n_nodes += 1
                 adopted.append(page)
+            elif precision is not None and child.precision is not None \
+                    and child.precision != precision:
+                break
             child.last_access = t
             node = child
         return adopted

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import get_precision
 from repro.engine.block_allocator import (
     BlockAllocator, CapacityError, OutOfPages, pages_for,
 )
@@ -100,7 +101,8 @@ class InstanceEngine:
                  kv_mode: str = "auto", page_size: int = 8,
                  n_pages: Optional[int] = None,
                  max_chunk: int = DEFAULT_MAX_CHUNK,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 kv_precision: str = "bf16"):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -108,6 +110,7 @@ class InstanceEngine:
         self.window_override = window_override
         self.max_chunk = max_chunk
         self.buckets = bucket_ladder(max_chunk)
+        self.kv_precision = get_precision(kv_precision)
         if kv_mode not in ("auto", "paged", "dense"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
         if kv_mode == "paged" and not supports_paged_kv(cfg):
@@ -118,12 +121,18 @@ class InstanceEngine:
         self.paged = (kv_mode == "paged" or
                       (kv_mode == "auto" and supports_paged_kv(cfg)
                        and window_override is None))
+        if self.kv_precision.quantized and not self.paged:
+            raise ValueError("quantized KV formats live on the page pool; "
+                             f"kv_precision={self.kv_precision.name!r} "
+                             f"requires a paged KV mode")
         if self.paged:
             self.page_size = page_size
             self.n_pages = (n_pages if n_pages is not None
                             else n_slots * pages_for(max_len, page_size))
-            self.cache = init_paged_cache(cfg, self.n_pages, page_size)
-            self.allocator = BlockAllocator(self.n_pages, page_size, n_slots)
+            self.cache = init_paged_cache(cfg, self.n_pages, page_size,
+                                          kv_precision=self.kv_precision)
+            self.allocator = BlockAllocator(self.n_pages, page_size, n_slots,
+                                            precision=self.kv_precision)
             self.page_buckets = bucket_ladder(self.n_pages)
         else:
             if prefix_cache:
@@ -211,7 +220,8 @@ class InstanceEngine:
         a miss or with the cache disabled)."""
         if self.prefix is None or self.allocator.len_of(slot) > 0:
             return 0
-        claim = self.prefix.claim(tokens, max_tokens=max_tokens)
+        claim = self.prefix.claim(tokens, max_tokens=max_tokens,
+                                  precision=self.kv_precision.name)
         if not claim.nodes:
             return 0
         self.allocator.splice(slot, claim.pages, claim.tokens)
@@ -222,7 +232,10 @@ class InstanceEngine:
     def lookup_prefix(self, tokens) -> int:
         """Non-mutating probe: cached prefix length in tokens (the
         global scheduler scores placements with it)."""
-        return self.prefix.match_len(tokens) if self.prefix else 0
+        if self.prefix is None:
+            return 0
+        return self.prefix.match_len(tokens,
+                                     precision=self.kv_precision.name)
 
     def remember(self, slot: int, tokens) -> int:
         """Index the slot's resident full pages under their token ids so
@@ -237,7 +250,9 @@ class InstanceEngine:
         n = (min(len(tokens), self.allocator.len_of(slot)) // page) * page
         if n <= 0:
             return 0
-        adopted = self.prefix.insert(tokens[:n], self.allocator.pages_of(slot))
+        adopted = self.prefix.insert(tokens[:n],
+                                     self.allocator.pages_of(slot),
+                                     precision=self.kv_precision.name)
         self.allocator.retain(adopted)
         return len(adopted)
 
@@ -350,10 +365,9 @@ class InstanceEngine:
         blocks = list(self.cache["blocks"])
         for i in range(len(blocks)):
             blocks[i] = {
-                "k_pages": blocks[i]["k_pages"].at[:, new_ids].set(
-                    blocks[i]["k_pages"][:, old_ids]),
-                "v_pages": blocks[i]["v_pages"].at[:, new_ids].set(
-                    blocks[i]["v_pages"][:, old_ids]),
+                key: blocks[i][key].at[:, new_ids].set(
+                    blocks[i][key][:, old_ids])
+                for key in blocks[i]        # k/v pages + dequant scales
             }
         self.cache = dict(self.cache, blocks=tuple(blocks))
 
@@ -505,27 +519,53 @@ class InstanceEngine:
             p1 = min(p0 + per_piece, n_need)
             ids = np.asarray(table[p0:p1], np.int32)
             piece = {"span": (p0 * page, min(p1 * page, upto)),
-                     "page_size": page, "pages": []}
+                     "page_size": page, "pages": [],
+                     "precision": self.kv_precision.name}
             for i in range(len(self.cfg.layer_pattern)):
                 c = self.cache["blocks"][i]
-                piece["pages"].append({
+                pc = {
                     "k": np.asarray(c["k_pages"][:, ids]),
                     "v": np.asarray(c["v_pages"][:, ids]),
-                })
+                }
+                if "k_scales" in c:
+                    # quantized pool: the per-token-row dequant scales
+                    # ride with their code pages
+                    pc["k_scales"] = np.asarray(c["k_scales"][:, ids])
+                    pc["v_scales"] = np.asarray(c["v_scales"][:, ids])
+                piece["pages"].append(pc)
             yield piece
             if p1 >= n_need:
                 break
 
+    def _to_pool_format(self, codes, scales):
+        """Convert one exported page stack (codes (G,n,page,KV,hd) plus
+        optional scales (G,n,page)) into THIS pool's storage format —
+        the cross-precision handoff path: a bf16 alpha importing into a
+        quantized beta pool quantizes on import, and vice versa."""
+        from repro.kernels.ops import quantize_kv
+        dst = self.kv_precision
+        x = jnp.asarray(codes)
+        if scales is not None:
+            x = x.astype(jnp.float32) * jnp.asarray(scales)[..., None, None]
+        if not dst.quantized:
+            pool_dt = self.cache["blocks"][0]["k_pages"].dtype
+            return x.astype(pool_dt), None
+        return quantize_kv(x, dst.name)
+
     def _import_paged(self, slot: int, pieces: Sequence[dict]) -> None:
         """Allocate destination pages for every piece, then write each
         layer's pool with ONE scatter over the concatenated page ids —
-        per-piece writes would copy the whole pool once per piece."""
+        per-piece writes would copy the whole pool once per piece.
+        Pieces exported from a pool of a different precision are
+        converted (dequantized / requantized) page-wise on import."""
         page = self.page_size
+        quantized = self.kv_precision.quantized
         all_ids: List[np.ndarray] = []
-        per_layer: List[List[np.ndarray]] = \
-            [[] for _ in self.cfg.layer_pattern]
-        per_layer_v: List[List[np.ndarray]] = \
-            [[] for _ in self.cfg.layer_pattern]
+        nl = len(self.cfg.layer_pattern)
+        per_k: List[List] = [[] for _ in range(nl)]
+        per_v: List[List] = [[] for _ in range(nl)]
+        per_ks: List[List] = [[] for _ in range(nl)]
+        per_vs: List[List] = [[] for _ in range(nl)]
         for piece in pieces:
             if piece.get("page_size") != page:
                 raise ValueError(
@@ -539,20 +579,39 @@ class InstanceEngine:
             table = self.allocator.pages_of(slot)
             all_ids.append(np.asarray(
                 table[lo // page: pages_for(hi, page)], np.int32))
+            src_name = piece.get("precision", "bf16")
             for i, pc in enumerate(piece["pages"]):
-                per_layer[i].append(pc["k"])
-                per_layer_v[i].append(pc["v"])
+                k, v = pc["k"], pc["v"]
+                ks, vs = pc.get("k_scales"), pc.get("v_scales")
+                if src_name != self.kv_precision.name:
+                    k, ks = self._to_pool_format(k, ks)
+                    v, vs = self._to_pool_format(v, vs)
+                per_k[i].append(k)
+                per_v[i].append(v)
+                if quantized:
+                    per_ks[i].append(ks)
+                    per_vs[i].append(vs)
         if not all_ids:
             return
         ids = np.concatenate(all_ids)
         blocks = list(self.cache["blocks"])
         for i in range(len(blocks)):
-            blocks[i] = {
+            nb = {
                 "k_pages": blocks[i]["k_pages"].at[:, ids].set(
-                    jnp.asarray(np.concatenate(per_layer[i], axis=1))),
+                    jnp.concatenate([jnp.asarray(a) for a in per_k[i]],
+                                    axis=1)),
                 "v_pages": blocks[i]["v_pages"].at[:, ids].set(
-                    jnp.asarray(np.concatenate(per_layer_v[i], axis=1))),
+                    jnp.concatenate([jnp.asarray(a) for a in per_v[i]],
+                                    axis=1)),
             }
+            if quantized:
+                nb["k_scales"] = blocks[i]["k_scales"].at[:, ids].set(
+                    jnp.concatenate([jnp.asarray(a) for a in per_ks[i]],
+                                    axis=1))
+                nb["v_scales"] = blocks[i]["v_scales"].at[:, ids].set(
+                    jnp.concatenate([jnp.asarray(a) for a in per_vs[i]],
+                                    axis=1))
+            blocks[i] = nb
         self.cache = dict(self.cache, blocks=tuple(blocks))
 
     def import_state(self, slot: int, pieces: Sequence[dict]) -> None:
@@ -612,15 +671,41 @@ class InstanceEngine:
                     for k, v in piece["cross"].items()})
         self.cache = cache
 
-    def state_bytes(self, upto: int, start: int = 0) -> int:
+    def _kv_itemsize(self) -> int:
+        """Itemsize of the dtype the KV cache actually stores — NOT
+        ``cfg.dtype``: a quantized page pool holds 1-byte codes, and a
+        cache initialised at a different compute dtype differs too."""
+        if self.paged:
+            return self.cache["blocks"][0]["k_pages"].dtype.itemsize
+        for c in self.cache["blocks"]:
+            if "k" in c:
+                return c["k"].dtype.itemsize
+        return jnp.dtype(self.cfg.dtype).itemsize
+
+    def state_bytes(self, upto: int, start: int = 0,
+                    as_precision=None) -> int:
         """Bytes a handoff of tokens ``[start, upto)`` moves (for
         transfer modeling; ``start > 0`` is the prefix the destination's
         cache already holds).  Paged engines ship whole pages, so the
         attention term is rounded up to the page size (the padding is
-        real wire traffic)."""
+        real wire traffic).  ``as_precision`` prices the same span as if
+        the pool stored that format (for savings accounting)."""
         cfg = self.cfg
         total = 0
-        per_tok = 2 * cfg.n_kv_heads * cfg.hd * jnp.dtype(cfg.dtype).itemsize
+        if as_precision is not None:
+            prec = get_precision(as_precision)
+            # unquantized formats store the compute dtype (f32 on the CPU
+            # smoke configs), not literal 2-byte bf16
+            item = prec.itemsize if prec.quantized \
+                else jnp.dtype(cfg.dtype).itemsize
+            per_tok = 2 * cfg.n_kv_heads * cfg.hd * item
+            quantized = self.paged and prec.quantized
+        else:
+            per_tok = 2 * cfg.n_kv_heads * cfg.hd * self._kv_itemsize()
+            quantized = self.paged and self.kv_precision.quantized
+        if quantized:
+            # k + v per-token f32 dequant scales travel with the codes
+            per_tok += 2 * 4
         if self.paged:
             upto_attn = (pages_for(upto, self.page_size)
                          - start // self.page_size) * self.page_size

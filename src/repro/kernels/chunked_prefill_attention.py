@@ -36,9 +36,13 @@ NEG_INF = -1e30
 
 def _kernel(off_ref,                      # scalar-prefetch: (B,) offsets
             q_ref, k_ref, v_ref,          # VMEM tiles
-            o_ref,                        # output tile
-            m_ref, l_ref, acc_ref,        # VMEM scratch (persist over kv dim)
-            *, bq: int, bk: int, qpk: int, scale: float, n_kv: int):
+            *rest,                        # [k/v scale tiles,] out, scratch
+            bq: int, bk: int, qpk: int, scale: float, n_kv: int,
+            quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     iq = pl.program_id(2)
     ik = pl.program_id(3)
@@ -59,6 +63,11 @@ def _kernel(off_ref,                      # scalar-prefetch: (B,) offsets
         q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # in-register dequant: per-token-row f32 scales streamed
+            # through the same (b, ik) tiling as the KV codes
+            k = k * ks_ref[0, :][:, None]
+            v = v * vs_ref[0, :][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = jnp.where(kpos <= qpos, s, NEG_INF)
@@ -78,11 +87,14 @@ def _kernel(off_ref,                      # scalar-prefetch: (B,) offsets
         o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def chunked_prefill_attention(q, k, v, offsets, *, bq: int = 128,
-                              bk: int = 128, interpret: bool = False):
+def chunked_prefill_attention(q, k, v, offsets, k_scales=None, v_scales=None,
+                              *, bq: int = 128, bk: int = 128,
+                              interpret: bool = False):
     """q: (B,Tq,H,hd); k,v: (B,S,KV,hd); offsets: (B,) int32 -> (B,Tq,H,hd)
 
     S and Tq are padded to the tile sizes by the ops wrapper.
+    ``k_scales``/``v_scales``: optional (B, S) f32 per-token dequant
+    scales when k/v hold quantized (fp8/int8) codes.
     """
     B, Tq, H, hd = q.shape
     S, KV = k.shape[1], k.shape[2]
@@ -92,23 +104,35 @@ def chunked_prefill_attention(q, k, v, offsets, *, bq: int = 128,
     assert Tq % bq == 0 and S % bk == 0, (Tq, bq, S, bk)
     n_q, n_kv = Tq // bq, S // bk
     grid = (B, H, n_q, n_kv)
+    quantized = k_scales is not None
 
     kernel = functools.partial(
-        _kernel, bq=bq, bk=bk, qpk=qpk, scale=1.0 / np.sqrt(hd), n_kv=n_kv)
+        _kernel, bq=bq, bk=bk, qpk=qpk, scale=1.0 / np.sqrt(hd), n_kv=n_kv,
+        quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, 1, hd),
+                     lambda b, h, iq, ik, off: (b, iq, h, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, iq, ik, off: (b, ik, h // qpk, 0)),
+        pl.BlockSpec((1, bk, 1, hd),
+                     lambda b, h, iq, ik, off: (b, ik, h // qpk, 0)),
+    ]
+    operands = [q, k, v]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik, off: (b, ik)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik, off: (b, ik)),
+        ]
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, bq, 1, hd),
-                             lambda b, h, iq, ik, off: (b, iq, h, 0)),
-                pl.BlockSpec((1, bk, 1, hd),
-                             lambda b, h, iq, ik, off: (b, ik, h // qpk, 0)),
-                pl.BlockSpec((1, bk, 1, hd),
-                             lambda b, h, iq, ik, off: (b, ik, h // qpk, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, bq, 1, hd),
                                    lambda b, h, iq, ik, off: (b, iq, h, 0)),
             scratch_shapes=[
@@ -122,4 +146,4 @@ def chunked_prefill_attention(q, k, v, offsets, *, bq: int = 128,
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(offsets, q, k, v)
+    )(offsets, *operands)

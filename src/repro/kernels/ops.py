@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import get_precision
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
 from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels import ref
@@ -18,6 +19,54 @@ from repro.kernels import ref
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+# guard: fp8 dtypes exist since jax 0.4.x but keep import-time safety
+_FP8_DTYPE = getattr(jnp, "float8_e4m3fn", None)
+
+#: quantization epsilon — the amax floor that keeps scales finite
+QUANT_EPS = 1e-8
+
+
+def kv_storage_dtype(precision, default=jnp.bfloat16):
+    """The jnp dtype a KV page pool stores at ``precision``."""
+    prec = get_precision(precision)
+    if not prec.quantized:
+        return default
+    if prec.name == "int8":
+        return jnp.int8
+    if _FP8_DTYPE is None:  # ancient jax: degrade to int8 codes
+        return jnp.int8
+    return _FP8_DTYPE
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def quantize_kv(x, precision: str):
+    """Quantize KV rows to codes + per-token scales.
+
+    ``x``: (..., KV, hd) float; one symmetric amax scale per leading
+    index (i.e. per token row across all KV heads and head dims):
+    ``scale = max(amax, eps) / qmax``, ``codes ~= x / scale`` stored in
+    the precision's dtype.  Returns ``(codes, scales)`` with
+    ``scales.shape == x.shape[:-2]`` f32.
+    """
+    prec = get_precision(precision)
+    assert prec.quantized, prec
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scales = jnp.maximum(amax, QUANT_EPS) / prec.qmax
+    y = xf / scales[..., None, None]
+    if kv_storage_dtype(prec) == jnp.int8:
+        codes = jnp.clip(jnp.round(y), -prec.qmax, prec.qmax).astype(jnp.int8)
+    else:
+        codes = jnp.clip(y, -prec.qmax, prec.qmax).astype(_FP8_DTYPE)
+    return codes, scales
+
+
+@jax.jit
+def dequantize_kv(codes, scales):
+    """Inverse of :func:`quantize_kv`: (codes, scales) -> f32 KV rows."""
+    return codes.astype(jnp.float32) * scales[..., None, None]
 
 
 def _pad_to(x, axis: int, mult: int):
@@ -31,9 +80,13 @@ def _pad_to(x, axis: int, mult: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
-def chunked_prefill_attention_op(q, k, v, offsets, *, bq: int = 128,
+def chunked_prefill_attention_op(q, k, v, offsets, k_scales=None,
+                                 v_scales=None, *, bq: int = 128,
                                  bk: int = 128, interpret: bool | None = None):
-    """Public op: pads Tq/S to tile multiples, runs the kernel, un-pads."""
+    """Public op: pads Tq/S to tile multiples, runs the kernel, un-pads.
+
+    ``k_scales``/``v_scales``: optional (B, S) per-token dequant scales
+    when k/v hold quantized codes."""
     if interpret is None:
         interpret = _on_cpu()
     B, Tq, H, hd = q.shape
@@ -42,19 +95,24 @@ def chunked_prefill_attention_op(q, k, v, offsets, *, bq: int = 128,
     qp = _pad_to(q, 1, bq_eff)
     kp = _pad_to(k, 1, bk_eff)
     vp = _pad_to(v, 1, bk_eff)
+    ksp = None if k_scales is None else _pad_to(k_scales, 1, bk_eff)
+    vsp = None if v_scales is None else _pad_to(v_scales, 1, bk_eff)
     out = chunked_prefill_attention(qp, kp, vp, offsets.astype(jnp.int32),
+                                    ksp, vsp,
                                     bq=bq_eff, bk=bk_eff, interpret=interpret)
     return out[:, :Tq]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode_attention_op(q, k_pages, v_pages, block_tables, lengths, *,
+def paged_decode_attention_op(q, k_pages, v_pages, block_tables, lengths,
+                              k_scales=None, v_scales=None, *,
                               interpret: bool | None = None):
     if interpret is None:
         interpret = _on_cpu()
     return paged_decode_attention(q, k_pages, v_pages,
                                   block_tables.astype(jnp.int32),
                                   lengths.astype(jnp.int32),
+                                  k_scales, v_scales,
                                   interpret=interpret)
 
 
@@ -71,18 +129,32 @@ def gather_pages(pages, block_tables):
     return pages[block_tables].reshape(B, n_pp * page, KV, hd)
 
 
+def gather_scales(scales, block_tables):
+    """Per-page dequant scales -> dense per-sequence scales:
+    (n_pages, page) + (B, n_pp) -> (B, n_pp*page)."""
+    B, n_pp = block_tables.shape
+    page = scales.shape[1]
+    return scales[block_tables].reshape(B, n_pp * page)
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
-def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, offsets, *,
+def paged_prefill_attention_op(q, k_pages, v_pages, block_tables, offsets,
+                               k_scales=None, v_scales=None, *,
                                bq: int = 128, bk: int = 128,
                                interpret: bool | None = None):
     """Chunked prefill over a paged KV pool: gathers the slots' pages to
     dense prefix KV and runs the chunked-prefill kernel.  ``q`` is the
     chunk's queries at global positions ``offsets[b] + i``; the chunk's
-    own K/V must already be written into the pages."""
-    k = gather_pages(k_pages, block_tables.astype(jnp.int32))
-    v = gather_pages(v_pages, block_tables.astype(jnp.int32))
-    return chunked_prefill_attention_op(q, k, v, offsets, bq=bq, bk=bk,
-                                        interpret=interpret)
+    own K/V must already be written into the pages.  With a quantized
+    pool, ``k_scales``/``v_scales`` are the (n_pages, page) scale planes
+    gathered alongside the code pages."""
+    tbl = block_tables.astype(jnp.int32)
+    k = gather_pages(k_pages, tbl)
+    v = gather_pages(v_pages, tbl)
+    ks = None if k_scales is None else gather_scales(k_scales, tbl)
+    vs = None if v_scales is None else gather_scales(v_scales, tbl)
+    return chunked_prefill_attention_op(q, k, v, offsets, ks, vs,
+                                        bq=bq, bk=bk, interpret=interpret)
 
 
 # re-export oracles for tests

@@ -29,9 +29,12 @@ NEG_INF = -1e30
 
 def _kernel(tables_ref, lens_ref,          # scalar prefetch
             q_ref, k_ref, v_ref,           # VMEM tiles
-            o_ref,
-            m_ref, l_ref, acc_ref,
-            *, page: int, qpk: int, scale: float, n_pp: int):
+            *rest,
+            page: int, qpk: int, scale: float, n_pp: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     ip = pl.program_id(2)
 
@@ -49,6 +52,11 @@ def _kernel(tables_ref, lens_ref,          # scalar prefetch
         q = q_ref[0, 0, :, :].astype(jnp.float32)             # (qpk, hd)
         k = k_ref[0, :, 0, :].astype(jnp.float32)             # (page, hd)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # in-register dequant: one f32 scale per token row of the
+            # page, prefetched alongside the page tile
+            k = k * ks_ref[0, :][:, None]
+            v = v * vs_ref[0, :][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         s = jnp.where(pos < length, s, NEG_INF)
@@ -68,34 +76,55 @@ def _kernel(tables_ref, lens_ref,          # scalar prefetch
         o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                           k_scales=None, v_scales=None, *,
                            interpret: bool = False):
     """q: (B,H,hd); k/v_pages: (n_pages,page,KV,hd);
-    block_tables: (B,n_pp) int32; lengths: (B,) -> (B,H,hd)."""
+    block_tables: (B,n_pp) int32; lengths: (B,) -> (B,H,hd).
+
+    ``k_scales``/``v_scales``: optional (n_pages, page) f32 per-token-row
+    dequant scales for quantized (fp8/int8) page pools — prefetched by
+    the same block-table index_map as the pages and applied in-register
+    after the f32 cast.
+    """
     B, H, hd = q.shape
     n_pages, page, KV, _ = k_pages.shape
     n_pp = block_tables.shape[1]
     qpk = H // KV
     qg = q.reshape(B, KV, qpk, hd)
     grid = (B, KV, n_pp)
+    quantized = k_scales is not None
 
     kernel = functools.partial(_kernel, page=page, qpk=qpk,
-                               scale=1.0 / np.sqrt(hd), n_pp=n_pp)
+                               scale=1.0 / np.sqrt(hd), n_pp=n_pp,
+                               quantized=quantized)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, qpk, hd),
+                     lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
+        # physical page chosen from the prefetched block table
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
+        pl.BlockSpec((1, page, 1, hd),
+                     lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, page),
+                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, h, ip, tbl, ln: (tbl[b, ip], 0)),
+        ]
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, qpk, hd),
-                             lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
-                # physical page chosen from the prefetched block table
-                pl.BlockSpec((1, page, 1, hd),
-                             lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
-                pl.BlockSpec((1, page, 1, hd),
-                             lambda b, h, ip, tbl, ln: (tbl[b, ip], 0, h, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, qpk, hd),
                                    lambda b, h, ip, tbl, ln: (b, h, 0, 0)),
             scratch_shapes=[
@@ -108,5 +137,5 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(block_tables, lengths, qg, k_pages, v_pages)
+    )(block_tables, lengths, *operands)
     return out.reshape(B, H, hd)

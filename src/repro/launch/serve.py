@@ -101,9 +101,21 @@ def serve_engine(args) -> SessionMetrics:
     mix = parse_slo_mix(args.slo_mix)
     reqs = mini_trace(args.requests, args.qps, args.seed, mix,
                       p_max=args.prompt_len, d_max=args.max_new)
+    kvp = None
+    if args.kv_precision and args.kv_precision != "bf16":
+        from repro.core.precision import PrecisionPolicy
+        pol = PrecisionPolicy.parse(args.kv_precision)
+        uni = pol.uniform
+        if uni is None:
+            raise SystemExit(
+                "engine pools store ONE format each; use a uniform "
+                "--kv-precision (bf16/fp8/int8) on the engine backend, "
+                "or the sim backend for SLO-mixed policies")
+        kvp = uni.name
     backend = EngineBackend(cfg, params, n_slots=max(8, 2 * args.requests),
                             max_len=args.prompt_len + args.max_new + 32,
-                            prefix_cache=args.prefix_cache)
+                            prefix_cache=args.prefix_cache,
+                            kv_precision=kvp or "bf16")
     policy = DynaServePolicy(backend.cost, args.slo)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
@@ -142,12 +154,17 @@ def serve_sim(args) -> SessionMetrics:
                                   max_instances=2 * args.instances))
     else:
         policy = DynaServePolicy(cost, args.slo)
+    from repro.core.precision import PrecisionPolicy
+    pol = PrecisionPolicy.parse(args.kv_precision)
+    uni = pol.uniform
+    prec_kw = dict(kv_precision=uni.name if uni is not None else "bf16",
+                   precision_policy=None if uni is not None else pol)
     if args.prefix_cache:
         backend = SimBackend(cost, page_size=args.page_size,
                              pages_per_instance=args.pages_per_instance,
-                             prefix_cache=True)
+                             prefix_cache=True, **prec_kw)
     else:
-        backend = SimBackend(cost)
+        backend = SimBackend(cost, **prec_kw)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
         admission=args.admission,
@@ -222,6 +239,12 @@ def main(argv=None):
                          "(--prefix-cache on the sim backend)")
     ap.add_argument("--pages-per-instance", type=int, default=4096,
                     help="sim page-pool capacity per instance")
+    ap.add_argument("--kv-precision", default="bf16",
+                    help="KV page storage format: bf16 | fp8 | int8 | "
+                         "mixed (BATCH-class quantized, rest bf16) | "
+                         "an explicit 'class=fmt,...' map.  Engine "
+                         "pools take a uniform format; the sim models "
+                         "SLO-mixed pools")
     ap.add_argument("--seed", type=int, default=0)
     # engine-backend knobs
     ap.add_argument("--requests", type=int, default=8)

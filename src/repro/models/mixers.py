@@ -283,7 +283,8 @@ def _paged_attention_fwd(p, q, k, v, cfg: ModelConfig, cache, batch_pos,
     Returns (y_pre_wo, new_cache).
     """
     from repro.kernels.ops import (
-        gather_pages, chunked_prefill_attention_op, paged_decode_attention_op,
+        gather_pages, gather_scales, chunked_prefill_attention_op,
+        paged_decode_attention_op, quantize_kv,
     )
     B, T = batch_pos.shape
     n_pages = cache["k_pages"].shape[0]
@@ -301,19 +302,38 @@ def _paged_attention_fwd(p, q, k, v, cfg: ModelConfig, cache, batch_pos,
         # pad / inactive tokens must not touch the pool: redirect their
         # writes to the (nonexistent) page n_pages and drop them
         phys = jnp.where(wmask, phys, n_pages)
-    ck = cache["k_pages"].at[phys, within].set(
-        k.astype(cache["k_pages"].dtype), mode="drop")
-    cv = cache["v_pages"].at[phys, within].set(
-        v.astype(cache["v_pages"].dtype), mode="drop")
-    new_cache = {"k_pages": ck, "v_pages": cv}
+    quantized = "k_scales" in cache
+    if quantized:
+        # quantize-on-write: fp8/int8 codes into the page pool plus one
+        # f32 amax scale per token row, scattered by the same
+        # (phys, within) coordinates (and the same drop masking)
+        prec = "int8" if cache["k_pages"].dtype == jnp.int8 else "fp8"
+        kq, ksc = quantize_kv(k, prec)                    # (B,T,KV,hd),(B,T)
+        vq, vsc = quantize_kv(v, prec)
+        ck = cache["k_pages"].at[phys, within].set(kq, mode="drop")
+        cv = cache["v_pages"].at[phys, within].set(vq, mode="drop")
+        cks = cache["k_scales"].at[phys, within].set(ksc, mode="drop")
+        cvs = cache["v_scales"].at[phys, within].set(vsc, mode="drop")
+        new_cache = {"k_pages": ck, "v_pages": cv,
+                     "k_scales": cks, "v_scales": cvs}
+    else:
+        ck = cache["k_pages"].at[phys, within].set(
+            k.astype(cache["k_pages"].dtype), mode="drop")
+        cv = cache["v_pages"].at[phys, within].set(
+            v.astype(cache["v_pages"].dtype), mode="drop")
+        cks = cvs = None
+        new_cache = {"k_pages": ck, "v_pages": cv}
     if T == 1:
         lengths = batch_pos[:, 0] + 1
-        y = paged_decode_attention_op(q[:, 0], ck, cv, block_tables, lengths)
+        y = paged_decode_attention_op(q[:, 0], ck, cv, block_tables, lengths,
+                                      cks, cvs)
         return y.reshape(B, 1, -1), new_cache
     offsets = batch_pos[:, 0]
     kg = gather_pages(ck, block_tables)
     vg = gather_pages(cv, block_tables)
-    y = chunked_prefill_attention_op(q, kg, vg, offsets)
+    ksg = None if cks is None else gather_scales(cks, block_tables)
+    vsg = None if cvs is None else gather_scales(cvs, block_tables)
+    y = chunked_prefill_attention_op(q, kg, vg, offsets, ksg, vsg)
     return y.reshape(B, T, -1), new_cache
 
 

@@ -213,30 +213,47 @@ def supports_paged_kv(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
-                     abstract: bool = False):
+                     abstract: bool = False, kv_precision=None):
     """Physical page pools, stacked over groups for the scan.
 
     Unlike ``init_cache`` there is no per-slot sequence axis: slots map
     logical positions to (page, offset) through a block table held by
     the engine's ``BlockAllocator`` and passed into ``forward`` per
     batch.  No ``pos`` array either — a paged position is its logical
-    index by construction."""
+    index by construction.
+
+    ``kv_precision`` (name or ``PagePrecision``, default bf16) selects
+    the page storage format: a quantized pool stores fp8/int8 codes in
+    ``k_pages``/``v_pages`` plus per-token-row f32 dequant scales in
+    ``k_scales``/``v_scales`` of shape (G, n_pages, page_size) — the
+    scale planes the paged kernels prefetch by the same block table."""
+    from repro.core.precision import get_precision
+    from repro.kernels.ops import kv_storage_dtype
+
     if not supports_paged_kv(cfg):
         raise ValueError(f"{cfg.name}: layer pattern "
                          f"{cfg.layer_pattern} cannot use a paged KV cache")
-    G, dt = cfg.n_groups, _dtype(cfg)
+    G = cfg.n_groups
+    prec = get_precision(kv_precision)
+    dt = kv_storage_dtype(prec, default=_dtype(cfg))
 
-    def make(shape):
+    def make(shape, dtype):
         if abstract:
-            return jax.ShapeDtypeStruct(shape, dt)
-        return jnp.zeros(shape, dt)
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
 
     caches = []
     for _ in cfg.layer_pattern:
-        caches.append({
-            "k_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd)),
-            "v_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd)),
-        })
+        c = {
+            "k_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd),
+                            dt),
+            "v_pages": make((G, n_pages, page_size, cfg.n_kv_heads, cfg.hd),
+                            dt),
+        }
+        if prec.quantized:
+            c["k_scales"] = make((G, n_pages, page_size), jnp.float32)
+            c["v_scales"] = make((G, n_pages, page_size), jnp.float32)
+        caches.append(c)
     return {"blocks": tuple(caches)}
 
 

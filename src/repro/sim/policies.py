@@ -108,8 +108,10 @@ class DisaggregationPolicy(BasePolicy):
     def on_micro_finished(self, m, sim, now: float) -> None:
         b = self._pending_beta.pop(m.rid, None)
         if b is not None:
-            exposed = monolithic_exposed(sim.cost, m.mr.end)
-            nbytes = sim.cost.kv_transfer_bytes(m.mr.end)
+            prec = sim.backend.request_precision(
+                m.iid, getattr(m.mr.parent.slo, "name", None))
+            exposed = monolithic_exposed(sim.cost, m.mr.end, precision=prec)
+            nbytes = sim.cost.kv_transfer_bytes(m.mr.end, prec)
             sim.release_beta(b, now + exposed, exposed, nbytes, src=m)
 
 
@@ -202,8 +204,14 @@ class DynaServePolicy(BasePolicy):
                 # between slots of the one engine)
                 sim.release_beta(b, now, 0.0, 0.0, src=m)
                 return
+            # the stream ships the source pool's wire format: quantized
+            # pages put ~half the bytes on the link per chunk
+            kvpt = sim.cost.kv_bytes_per_tok_at(
+                sim.backend.request_precision(
+                    m.iid, getattr(m.mr.parent.slo, "name", None)))
             plan = plan_chunked_transfer(sim.cost, m.mr.end,
-                                         self.transfer_chunk)
+                                         self.transfer_chunk,
+                                         kv_bytes_per_tok=kvpt)
             sim.release_beta(b, now + plan.exposed, plan.exposed,
                              plan.total_bytes, src=m)
 

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.costmodel import BatchCostModel, WorkItem
 from repro.core.paging import pages_for
+from repro.core.precision import PrecisionPolicy, get_precision
 from repro.core.request import Request
 from repro.core.session import (
     Backend, ExecResult, InstanceState, MicroState, ReqState, ServeHandle,
@@ -105,7 +106,9 @@ class SimBackend(Backend):
                  pages_per_instance: Optional[int] = None,
                  prefix_cache: bool = False,
                  host_overhead: float = 0.0,
-                 interleave: Optional[InterleaveSchedule] = None):
+                 interleave: Optional[InterleaveSchedule] = None,
+                 kv_precision="bf16",
+                 precision_policy: Optional[PrecisionPolicy] = None):
         if bool(page_size) != bool(pages_per_instance):
             raise ValueError(
                 "page_size and pages_per_instance must be set together "
@@ -131,10 +134,26 @@ class SimBackend(Backend):
         # Optional seeded permutation of completion-event delivery; see
         # InterleaveSchedule.  None = deterministic earliest-first.
         self.interleave = interleave
+        # per-page KV precision: ``kv_precision`` denominates each
+        # instance's pool (str, or dict/sequence per-instance like the
+        # engine backend's heterogeneous pools); ``precision_policy``
+        # additionally maps SLO classes to per-request page formats
+        # (mixed-precision pools — quantized requests commit half the
+        # frames of the same pages_per_instance HBM budget)
+        self.kv_precision = kv_precision
+        if isinstance(precision_policy, str):
+            precision_policy = PrecisionPolicy.parse(precision_policy)
+        self.precision_policy = precision_policy
+        # modeled wire savings of quantized handoffs, per destination
+        # instance (the engine backend meters the same quantity)
+        self.handoff_bytes_saved = 0
+        self.handoff_saved_by_iid: Dict[int, int] = {}
         # device-serialization state for overlapped dispatch: per
         # instance, the virtual time its device frees up
         self._device_free: Dict[int, float] = {}
-        # pages reserved by batches dispatched but not yet completed
+        # capacity reserved by batches dispatched but not yet completed,
+        # denominated in FRAMES (pool_precision.frames per page, so the
+        # uniform-precision case is the old page count scaled exactly)
         self._inflight_pages: Dict[int, int] = {}
         self._placed: Dict[int, Dict[str, MicroState]] = {}
         # shared-prefix model: the engine's trie, per instance, over the
@@ -154,24 +173,52 @@ class SimBackend(Backend):
         self._device_free.pop(iid, None)
         self._inflight_pages.pop(iid, None)
 
+    # ---------------- per-page KV precision ----------------
+    def pool_precision(self, iid: int):
+        spec = self.kv_precision
+        if isinstance(spec, dict):
+            spec = spec.get(iid, spec.get("default", "bf16"))
+        elif isinstance(spec, (list, tuple)):
+            spec = spec[iid % len(spec)]
+        return get_precision(spec)
+
+    def request_precision(self, iid: int, slo_name):
+        if self.precision_policy is not None:
+            return self.precision_policy.for_slo(slo_name)
+        return self.pool_precision(iid)
+
+    def _micro_frames(self, micro: MicroState) -> int:
+        """Frames one of the micro's pages costs (its request's SLO
+        class sets the format under a precision policy)."""
+        slo = micro.mr.parent.slo
+        return self.request_precision(
+            micro.iid, slo.name if slo is not None else None).frames
+
     # ---------------- shared-prefix model ----------------
     @staticmethod
     def _prompt_of(req: Request):
         return req.prompt_tokens
+
+    def _req_precision_name(self, iid: int, req: Request) -> str:
+        return self.request_precision(
+            iid, req.slo.name if req.slo is not None else None).name
 
     def cached_prefix(self, iid: int, req: Request) -> int:
         trie = self._tries.get(iid)
         toks = self._prompt_of(req)
         if trie is None or toks is None:
             return 0
-        return trie.match_len(toks)
+        return trie.match_len(
+            toks, precision=self._req_precision_name(iid, req))
 
     def claim_prefix(self, micro: MicroState, limit: int) -> int:
         trie = self._tries.get(micro.iid)
         toks = self._prompt_of(micro.mr.parent)
         if trie is None or toks is None:
             return 0
-        claim = trie.claim(toks, max_tokens=limit)
+        claim = trie.claim(toks, max_tokens=limit,
+                           precision=self._req_precision_name(
+                               micro.iid, micro.mr.parent))
         if not claim.nodes:
             return 0
         self._claims[micro.rid] = claim
@@ -214,7 +261,9 @@ class SimBackend(Backend):
                 # the trie *shape* is the cross-substrate contract; a
                 # beta still waiting on its handoff holds no KV)
                 n = min(micro.pos, len(toks))
-                trie.insert(np.asarray(toks)[:n - n % self.page_size])
+                trie.insert(np.asarray(toks)[:n - n % self.page_size],
+                            precision=self._req_precision_name(
+                                micro.iid, micro.mr.parent))
             self._drop_claim(micro)
             self._placed.get(micro.iid, {}).pop(micro.rid, None)
 
@@ -222,29 +271,43 @@ class SimBackend(Backend):
         if self.page_size:
             self._drop_claim(micro)
 
-    def _evict_to_fit(self, iid: int, need: int) -> None:
-        """Shrink the instance's trie until ``need`` new pages fit the
-        physical pool — the sim-side mirror of the engine allocator's
-        ``_reclaim`` running inside an import's ``ensure``, so both
-        tries shed LRU leaves at the same logical events."""
+    def _evict_to_fit(self, iid: int, need_frames: int) -> None:
+        """Shrink the instance's trie until ``need_frames`` new frames
+        fit the physical pool — the sim-side mirror of the engine
+        allocator's ``_reclaim`` running inside an import's ``ensure``,
+        so both tries shed LRU leaves at the same logical events."""
         trie = self._tries.get(iid)
         if trie is None:
             return
-        phys_free = self.pages_per_instance \
-            - self._private_pages(iid) - trie.n_pages
-        while phys_free < need:
+        pf = self.pool_precision(iid).frames
+        phys_free = self.total_frames(iid) \
+            - self._private_frames(iid) - trie.n_pages * pf
+        while phys_free < need_frames:
             if trie.evict_one() is None:
                 break
-            phys_free += 1
+            phys_free += pf
 
     def on_handoff_import(self, beta: MicroState) -> None:
         """The beta's KV import is about to allocate its non-cached
         pages on the destination; evict cold cache entries first,
-        exactly like the engine's ``_import_paged`` would."""
+        exactly like the engine's ``_import_paged`` would.  A quantized
+        stream also books its modeled wire savings vs bf16 here (the
+        engine backend meters the same gauge from real exports)."""
         if self.page_size:
             self._evict_to_fit(
                 beta.iid,
-                pages_for(beta.pos, self.page_size) - beta.shared_pages)
+                (pages_for(beta.pos, self.page_size) - beta.shared_pages)
+                * self._micro_frames(beta))
+            slo = beta.mr.parent.slo
+            prec = self.request_precision(
+                beta.iid, slo.name if slo is not None else None)
+            if prec.quantized and beta.pos > 0:
+                saved = int(self.cost.kv_transfer_bytes(beta.pos) -
+                            self.cost.kv_transfer_bytes(beta.pos, prec))
+                if saved > 0:
+                    self.handoff_bytes_saved += saved
+                    self.handoff_saved_by_iid[beta.iid] = \
+                        self.handoff_saved_by_iid.get(beta.iid, 0) + saved
 
     def on_migrate(self, micro: MicroState, src_iid: int,
                    dst_iid: int) -> bool:
@@ -252,8 +315,12 @@ class SimBackend(Backend):
             if micro.pos > 0 and micro.ready != float("inf"):
                 # resident KV must fit the destination pool (the engine
                 # backend declines the move the same way)
-                need = pages_for(micro.pos, self.page_size)
-                free = self.free_pages(dst_iid)
+                slo = micro.mr.parent.slo
+                need = pages_for(micro.pos, self.page_size) \
+                    * self.request_precision(
+                        dst_iid,
+                        slo.name if slo is not None else None).frames
+                free = self.free_frames(dst_iid)
                 if free is not None and free < need:
                     return False
                 # the engine's import would reclaim cache pages on the
@@ -265,28 +332,40 @@ class SimBackend(Backend):
             self._placed.setdefault(dst_iid, {})[micro.rid] = micro
         return True
 
-    def _private_pages(self, iid: int) -> int:
+    def _private_frames(self, iid: int) -> int:
         p = self.page_size
         return sum(max(0, pages_for(m.pos, p) - m.shared_pages)
+                   * self._micro_frames(m)
                    for m in self._placed.get(iid, {}).values()
                    if m.ready != float("inf") and m.pos > 0)
 
-    def _used_pages(self, iid: int) -> int:
-        """Pages unavailable to new work: privately-held pages plus the
-        *pinned* part of the prefix cache — unpinned cached pages count
-        as free because the engine evicts them on demand, strictly
-        before preempting any request."""
-        used = self._private_pages(iid)
+    def _used_frames(self, iid: int) -> int:
+        """Frames unavailable to new work: privately-held pages (each
+        priced at its request's precision) plus the *pinned* part of
+        the prefix cache — unpinned cached pages count as free because
+        the engine evicts them on demand, strictly before preempting
+        any request."""
+        used = self._private_frames(iid)
         used += self._inflight_pages.get(iid, 0)
         trie = self._tries.get(iid)
         if trie is not None:
-            used += trie.pinned_pages
+            used += trie.pinned_pages * self.pool_precision(iid).frames
         return used
+
+    def free_frames(self, iid: int) -> Optional[int]:
+        if not self.page_size:
+            return None
+        return max(0, self.total_frames(iid) - self._used_frames(iid))
+
+    def total_frames(self, iid: int) -> Optional[int]:
+        if not self.page_size:
+            return None
+        return self.pages_per_instance * self.pool_precision(iid).frames
 
     def free_pages(self, iid: int) -> Optional[int]:
         if not self.page_size:
             return None
-        return max(0, self.pages_per_instance - self._used_pages(iid))
+        return self.free_frames(iid) // self.pool_precision(iid).frames
 
     def total_pages(self, iid: int) -> Optional[int]:
         return self.pages_per_instance if self.page_size else None
@@ -297,10 +376,26 @@ class SimBackend(Backend):
         either substrate."""
         out: Dict[str, float] = {}
         if self.page_size:
+            pf = self.pool_precision(iid).frames
             out["kv_pages_free"] = float(self.free_pages(iid))
             out["kv_pages_total"] = float(self.pages_per_instance)
+            out["kv_frames_free"] = float(self.free_frames(iid))
+            out["kv_frames_total"] = float(self.total_frames(iid))
             out["kv_pages_inflight"] = float(
-                self._inflight_pages.get(iid, 0))
+                self._inflight_pages.get(iid, 0) // pf)
+            used: Dict[str, int] = {}
+            for m in self._placed.get(iid, {}).values():
+                if m.ready == float("inf") or m.pos <= 0:
+                    continue
+                slo = m.mr.parent.slo
+                name = self.request_precision(
+                    iid, slo.name if slo is not None else None).name
+                used[name] = used.get(name, 0) + max(
+                    0, pages_for(m.pos, self.page_size) - m.shared_pages)
+            for name, n in used.items():
+                out[f"kv_pages_used_{name}"] = float(n)
+            out["handoff_bytes_saved"] = \
+                float(self.handoff_saved_by_iid.get(iid, 0))
         trie = self._tries.get(iid)
         if trie is not None:
             out["prefix_cache_pages"] = float(trie.n_pages)
@@ -310,13 +405,16 @@ class SimBackend(Backend):
     # ---------------- execution ----------------
     def _batch_growth(self, grants: Sequence[Tuple[MicroState, int]],
                       decs: Sequence[MicroState]) -> int:
-        """KV pages this batch will newly occupy (0 without paging)."""
+        """KV frames this batch will newly occupy (0 without paging) —
+        each micro's new pages priced at its request's precision."""
         p = self.page_size
         if not p:
             return 0
-        growth = sum(pages_for(m.pos + g, p) - pages_for(m.pos, p)
+        growth = sum((pages_for(m.pos + g, p) - pages_for(m.pos, p))
+                     * self._micro_frames(m)
                      for m, g in grants)
-        growth += sum(1 for m in decs if m.pos % p == 0)
+        growth += sum(self._micro_frames(m) for m in decs
+                      if m.pos % p == 0)
         return growth
 
     def _account_batch_growth(self, inst: InstanceState,
@@ -328,12 +426,13 @@ class SimBackend(Backend):
             # the engine allocates this batch's pages inside run_batch,
             # evicting LRU cached prefixes when the free list runs dry;
             # mirror that here so both tries shrink at the same points
-            phys_free = self.pages_per_instance \
-                - self._private_pages(inst.iid) - trie.n_pages
+            pf = self.pool_precision(inst.iid).frames
+            phys_free = self.total_frames(inst.iid) \
+                - self._private_frames(inst.iid) - trie.n_pages * pf
             while phys_free < growth:
                 if trie.evict_one() is None:
                     break
-                phys_free += 1
+                phys_free += pf
         return growth
 
     def execute(self, inst: InstanceState,

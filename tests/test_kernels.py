@@ -180,3 +180,135 @@ def test_paged_decode_ignores_pages_beyond_length():
     out2 = paged_decode_attention_op(q, kp2, vp2, tbl, lens, interpret=True)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages: fp8/int8 codes + per-token scales, dequantized
+# in-register by the same kernels.  Two-sided parity: the quantized kernel
+# must match the oracle run on the *dequantized* values tightly (the kernel
+# mechanics add no error beyond the f32 math), and match the full-precision
+# oracle within the format's quantization error budget.
+# ---------------------------------------------------------------------------
+from repro.kernels.ops import (  # noqa: E402
+    dequantize_kv, gather_scales, kv_storage_dtype, quantize_kv,
+)
+
+QTOL = {"fp8": 0.15, "int8": 0.04}      # abs error vs full-precision oracle
+QPREC = ["fp8", "int8"]
+
+
+@pytest.mark.parametrize("prec", QPREC)
+def test_quantize_roundtrip_error_bound(prec):
+    x = _rand((5, 16, 2, 64), jnp.float32)
+    codes, scales = quantize_kv(x, prec)
+    assert codes.dtype == kv_storage_dtype(prec)
+    assert scales.shape == (5, 16) and scales.dtype == jnp.float32
+    back = dequantize_kv(codes, scales)
+    err = float(jnp.max(jnp.abs(back - x)))
+    # symmetric amax quantization: per-row error <= scale/2 (int8 rounds)
+    # or ~scale * ulp spacing (fp8); both comfortably under QTOL here
+    assert err < QTOL[prec], err
+
+
+@pytest.mark.parametrize("prec", QPREC)
+@pytest.mark.parametrize("page,qpk", [(8, 1), (16, 2), (32, 4)])
+def test_paged_decode_quantized_parity(prec, page, qpk):
+    """GQA sizes x page sizes x ragged lengths through the quantized
+    decode kernel."""
+    B, KV, hd, ppseq = 3, 2, 64, 3
+    H = KV * qpk
+    n_pages = B * ppseq + 1
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.asarray(
+        RNG.permutation(n_pages)[:B * ppseq].reshape(B, ppseq), jnp.int32)
+    lens = jnp.asarray([1, page * 2 - 3, page * ppseq], jnp.int32)  # ragged
+    kc, ks = quantize_kv(kp, prec)
+    vc, vs = quantize_kv(vp, prec)
+    out = paged_decode_attention_op(q, kc, vc, tbl, lens, ks, vs,
+                                    interpret=True)
+    # tight vs the oracle on the dequantized values: kernel mechanics only
+    exp_dq = paged_decode_attention_ref(q, dequantize_kv(kc, ks),
+                                        dequantize_kv(vc, vs), tbl, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp_dq),
+                               rtol=2e-5, atol=2e-5)
+    # loose vs the full-precision oracle: bounded quantization error
+    exp = paged_decode_attention_ref(q, kp, vp, tbl, lens)
+    assert float(jnp.max(jnp.abs(out - exp))) < QTOL[prec]
+
+
+@pytest.mark.parametrize("prec", QPREC)
+@pytest.mark.parametrize("B,Tq,S,KV,qpk,bq,bk", [
+    (2, 24, 64, 2, 4, 8, 16),     # GQA, ragged chunk
+    (1, 33, 70, 2, 2, 16, 32),    # non-multiple sizes (wrapper pads scales)
+    (3, 8, 40, 4, 1, 8, 8),       # MHA, per-row ragged offsets
+])
+def test_chunked_prefill_quantized_parity(prec, B, Tq, S, KV, qpk, bq, bk):
+    hd = 64
+    q = _rand((B, Tq, KV * qpk, hd), jnp.float32)
+    k = _rand((B, S, KV, hd), jnp.float32)
+    v = _rand((B, S, KV, hd), jnp.float32)
+    off = jnp.asarray(RNG.integers(0, S - Tq, B), jnp.int32)
+    kc, ks = quantize_kv(k, prec)
+    vc, vs = quantize_kv(v, prec)
+    out = chunked_prefill_attention_op(q, kc, vc, off, ks, vs,
+                                       bq=bq, bk=bk, interpret=True)
+    exp_dq = chunked_prefill_attention_ref(q, dequantize_kv(kc, ks),
+                                           dequantize_kv(vc, vs), off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp_dq),
+                               rtol=2e-5, atol=2e-5)
+    exp = chunked_prefill_attention_ref(q, k, v, off)
+    assert float(jnp.max(jnp.abs(out - exp))) < QTOL[prec]
+
+
+@pytest.mark.parametrize("prec", QPREC)
+def test_paged_prefill_quantized_gathers_scales(prec):
+    """The paged-prefill path must gather the scale planes alongside the
+    code pages and land on the dense quantized kernel's output."""
+    B, Tq, ctx, H, KV, hd, page = 2, 5, 11, 4, 2, 32, 8
+    total = ctx + Tq
+    ppseq = -(-total // page) + 1
+    n_pages = B * ppseq + 1
+    q = _rand((B, Tq, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.asarray(
+        RNG.permutation(n_pages)[:B * ppseq].reshape(B, ppseq), jnp.int32)
+    off = jnp.full((B,), ctx, jnp.int32)
+    kc, ks = quantize_kv(kp, prec)
+    vc, vs = quantize_kv(vp, prec)
+    out = paged_prefill_attention_op(q, kc, vc, tbl, off, ks, vs,
+                                     interpret=True)
+    kd = gather_pages(dequantize_kv(kc, ks), tbl)
+    vd = gather_pages(dequantize_kv(vc, vs), tbl)
+    exp_dq = chunked_prefill_attention_ref(q, kd, vd, off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp_dq),
+                               rtol=2e-5, atol=2e-5)
+    assert gather_scales(ks, tbl).shape == (B, ppseq * page)
+
+
+@pytest.mark.parametrize("prec", QPREC)
+def test_paged_decode_quantized_ignores_poison_pages(prec):
+    """Garbage codes AND garbage scales in pages past ``length`` must not
+    leak into the quantized decode output."""
+    B, H, KV, hd, page, ppseq = 1, 4, 2, 32, 8, 4
+    n_pages = 8
+    q = _rand((B, H, hd), jnp.float32)
+    kp = _rand((n_pages, page, KV, hd), jnp.float32)
+    vp = _rand((n_pages, page, KV, hd), jnp.float32)
+    tbl = jnp.arange(ppseq, dtype=jnp.int32)[None]
+    lens = jnp.array([11], jnp.int32)
+    kc, ks = quantize_kv(kp, prec)
+    vc, vs = quantize_kv(vp, prec)
+    out1 = paged_decode_attention_op(q, kc, vc, tbl, lens, ks, vs,
+                                     interpret=True)
+    qmax = 127 if prec == "int8" else 448
+    kc2 = kc.at[2:].set(jnp.asarray(qmax, kc.dtype))   # poison codes
+    vc2 = vc.at[2:].set(jnp.asarray(-qmax, vc.dtype))
+    ks2 = ks.at[2:].set(1e6)                            # poison scales
+    vs2 = vs.at[2:].set(1e6)
+    out2 = paged_decode_attention_op(q, kc2, vc2, tbl, lens, ks2, vs2,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
