@@ -26,14 +26,20 @@ DURATION = 4.0
 
 
 def run_backend(csv: Csv, backend: str, levels=LEVELS,
-                duration: float = DURATION) -> None:
+                duration: float = DURATION,
+                flight_recorder: bool = True,
+                tag: str = "") -> float:
+    """Serve one closed-loop sweep; returns total token throughput at
+    the highest concurrency level (the recorder-overhead comparison)."""
     from repro.serving.http import ServerConfig, ServingServer
     from repro.serving.loadgen import run_load
 
     cfg = ServerConfig(port=0, backend=backend, admission=True,
                        retain_finished=True,
+                       flight_recorder=flight_recorder,
                        max_tokens_cap=64 if backend == "engine" else 512)
     srv = ServingServer(cfg).start()
+    tok_s = 0.0
     try:
         for clients in levels:
             rep = run_load("127.0.0.1", srv.port, clients=clients,
@@ -44,23 +50,44 @@ def run_backend(csv: Csv, backend: str, levels=LEVELS,
             if rep["errors"]:
                 raise RuntimeError(
                     f"{rep['errors']} client errors at c={clients}")
-            csv.add(f"http_serving/{backend}/c{clients}",
+            tok_s = rep["tok_per_s"]
+            csv.add(f"http_serving/{backend}{tag}/c{clients}",
                     rep["latency_mean"] * 1e6,
                     f"rps={rep['rps']:.1f};tok_s={rep['tok_per_s']:.1f};"
                     f"rejected={rep['rejected']}")
         m = srv.driver.call(lambda s: s.metrics())
         for name in sorted(m.per_class):
             c = m.per_class[name]
-            csv.add(f"http_serving/{backend}/goodput/{name}",
+            csv.add(f"http_serving/{backend}{tag}/goodput/{name}",
                     c.ttft_p50 * 1e6,
                     f"goodput={c.goodput:.1f};attain={c.attainment:.2f};"
                     f"done={c.completed};rej={c.rejected}")
+        if srv.recorder is not None:
+            from repro.serving.attribution import analyze
+            report = analyze(srv.recorder.events())
+            for name, cause in sorted(report.top_causes().items()):
+                cls = report.per_class[name]
+                csv.add(f"http_serving/{backend}{tag}/attribution/{name}",
+                        float(cls.n),
+                        f"ttft_miss={cls.ttft_misses};"
+                        f"tbt_miss={cls.tbt_misses};"
+                        f"top_cause={cause or '-'}")
     finally:
         srv.stop()
+    return tok_s
 
 
 def main(csv: Csv) -> None:
-    run_backend(csv, "sim")
+    tok_off = run_backend(csv, "sim", flight_recorder=False,
+                          tag="/recorder_off")
+    tok_on = run_backend(csv, "sim", flight_recorder=True)
+    # recorder overhead on the serving path (report-only: 4s closed-loop
+    # wall-clock runs are too noisy for a hard assertion; the acceptance
+    # budget is < 3%)
+    pct = 100.0 * (tok_off - tok_on) / max(tok_off, 1e-9)
+    csv.add("http_serving/recorder_overhead", pct,
+            f"tok_s_off={tok_off:.1f};tok_s_on={tok_on:.1f};"
+            f"overhead_pct={pct:.2f}")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ MODULES = [
     "prefix_reuse",
     "quantized_kv",
     "http_serving",
+    "attribution",
     "kernel_bench",
     "roofline",
 ]

@@ -116,6 +116,10 @@ class PoolController:
         self._mix: Optional[float] = None       # EWMA prefill token fraction
         self._last_up = -math.inf
         self._last_down = -math.inf
+        # the signal snapshot behind the most recent decide() call —
+        # recorded alongside each pool action by the flight recorder so
+        # scale events carry the evidence they were based on
+        self.last_signals: dict = {}
 
     # ------------------------------------------------------------------
     # signals
@@ -162,6 +166,9 @@ class PoolController:
         n_active = len(active)
 
         if not active:
+            self.last_signals = {"load": self.load, "mix": self._mix,
+                                 "n_active": 0, "total_queued": 0,
+                                 "max_pressure": 0.0}
             if len(stats) < cfg.max_instances:
                 self._last_up = now
                 return [ScaleUp("pool empty")]
@@ -186,6 +193,10 @@ class PoolController:
         # so the pool never runs more than max_instances concurrently
         draining_iids = {s.iid for s in stats if s.draining}
         max_pressure = max((s.mem_pressure for s in active), default=0.0)
+        self.last_signals = {"load": self._load, "mix": self._mix,
+                             "n_active": n_active,
+                             "total_queued": total_queued,
+                             "max_pressure": max_pressure}
         pressured = max_pressure > cfg.scale_up_pressure
         scaled_up = False
         if (((self._load > cfg.scale_up_drain and has_backlog) or pressured)

@@ -51,6 +51,14 @@ class Placement:
     predicted_t2: float
     probes: int
     overhead_s: float
+    # Decision provenance for the flight recorder: every (phi, t1, t2)
+    # the binary search *considered* (not just the winner), and the
+    # per-candidate-instance drain scores pick_pair ranked.  Costless
+    # when unobserved: the lists are built during scheduling anyway.
+    trials: List[Tuple[float, float, float]] = \
+        dataclasses.field(default_factory=list)
+    candidates: List[Tuple[int, float]] = \
+        dataclasses.field(default_factory=list)
 
 
 class GlobalScheduler:
@@ -68,6 +76,9 @@ class GlobalScheduler:
         # underestimation (20 tokens in their setup)
         self.margin_tokens = margin_tokens
         self._rr = 0
+        # (iid, biased drain score) per candidate from the last
+        # pick_pair call — recorded into Placement.candidates
+        self._last_candidates: List[Tuple[int, float]] = []
 
     # ------------------------------------------------------------------
     def _work_of(self, mr: MicroRequest, ready: float = 0.0,
@@ -97,12 +108,15 @@ class GlobalScheduler:
         """
         n = len(instances)
         if n == 1:
+            self._last_candidates = [(instances[0].iid, 0.0)]
             return 0, 0
         cands = [i for i in range(n) if not instances[i].draining] or \
             list(range(n))
         if len(cands) == 1:
+            self._last_candidates = [(instances[cands[0]].iid, 0.0)]
             return cands[0], cands[0]
         dt = {i: self.predictor.drain_time(instances[i].queue) for i in cands}
+        self._last_candidates = [(instances[i].iid, dt[i]) for i in cands]
         # bias weight relative to typical drain so it reorders only
         # near-ties; the floor keeps it meaningful on an idle pool
         w = 0.25 * (sum(dt.values()) / len(cands)) + 1e-3
@@ -147,7 +161,9 @@ class GlobalScheduler:
             t1 = self.predictor.completion_time(
                 qa, self._work_of(whole, cached=ca), slo=slo)
             return Placement(whole, None, ia, None, 1.0, t1, 0.0, 0,
-                             time.perf_counter() - t0)
+                             time.perf_counter() - t0,
+                             trials=[(1.0, t1, 0.0)],
+                             candidates=list(self._last_candidates))
 
         # cold start: both instances idle -> PD-disaggregation split;
         # the completion probes still score effective (post-hit)
@@ -166,12 +182,15 @@ class GlobalScheduler:
                 slo=slo)
             return Placement(alpha, beta, ia if alpha else None,
                              ib if beta else None, phi, t1, t2, 0,
-                             time.perf_counter() - t0)
+                             time.perf_counter() - t0,
+                             trials=[(phi, t1, t2)],
+                             candidates=list(self._last_candidates))
 
         lo, hi = 0.0, 1.0
         phi = r_eff.P / r_eff.L          # start from PD disaggregation
         best = None
         probes = 0
+        trials: List[Tuple[float, float, float]] = []
         for _ in range(self.max_probes):
             probes += 1
             alpha, beta = split_request(r_eff, phi)
@@ -181,6 +200,7 @@ class GlobalScheduler:
             t2 = self.predictor.completion_time(
                 qb, self._work_of(beta, cached=cb) if beta else None,
                 slo=slo)
+            trials.append((phi, t1, t2))
             gap = abs(t1 - t2)
             if best is None or gap < best[0]:
                 best = (gap, phi, alpha, beta, t1, t2)
@@ -201,9 +221,13 @@ class GlobalScheduler:
         whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
         t_whole = self.predictor.completion_time(
             qa, self._work_of(whole, cached=ca), slo=slo)
+        trials.append((1.0, t_whole, 0.0))
         if t_whole <= max(t1, t2) * (1.0 + self.split_gain_threshold):
             return Placement(whole, None, ia, None, 1.0, t_whole, 0.0,
-                             probes, time.perf_counter() - t0)
+                             probes, time.perf_counter() - t0,
+                             trials=trials,
+                             candidates=list(self._last_candidates))
         return Placement(alpha, beta, ia if alpha else None,
                          ib if beta else None, phi, t1, t2, probes,
-                         time.perf_counter() - t0)
+                         time.perf_counter() - t0, trials=trials,
+                         candidates=list(self._last_candidates))

@@ -80,6 +80,11 @@ class BatchPlan:
     starved: bool = False
     # granted tokens served from the shared-prefix cache (no compute)
     cached_tokens: int = 0
+    # decision provenance (flight recorder): the SLO-inverted prefill
+    # token budget M this batch was sized under, and the effective TBT
+    # window after the pipeline discount
+    budget: int = 0
+    slo_eff: float = 0.0
 
     @property
     def prefill_tokens(self) -> int:
@@ -274,4 +279,5 @@ class LocalScheduler:
         p_ctx = grants[0][0].ctx if grants else 0
         lat = self.cost.mixed_batch_latency(plen, p_ctx, len(decodes), d_ctx)
         return BatchPlan(decodes, grants, lat, starved=starved,
-                         cached_tokens=cached_total)
+                         cached_tokens=cached_total, budget=M,
+                         slo_eff=slo_eff)

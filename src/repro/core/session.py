@@ -112,6 +112,10 @@ class MicroState:
     # cache (claimed, pinned): they cost no prefill compute and are
     # counted ONCE per instance in admission commitments
     shared_pages: int = 0
+    # High-water mark of positions lost to preemption / handoff
+    # fallback: grants below it are *recomputed* work, which the flight
+    # recorder attributes separately from first-time prefill
+    recompute_hi: int = 0
 
     @property
     def rid(self) -> str:
@@ -446,6 +450,12 @@ class Backend:
         readings.  Empty by default; sampling must not mutate state."""
         return {}
 
+    def describe(self) -> Dict[str, object]:
+        """Static substrate configuration for the flight recorder's
+        ``meta`` event — enough for ``repro.sim.replay`` to rebuild an
+        equivalent backend from a recorded decision log."""
+        return {}
+
 
 # ---------------------------------------------------------------------------
 # Config + metrics
@@ -656,8 +666,14 @@ class ServeSession:
         # ``on_transition(req, old, new, now)`` on each state change,
         # ``on_placed(req, placements, now)`` after the global scheduler
         # splits/places, ``on_token(req, now)`` per delivered token.
-        # Observers must treat the session as read-only.
+        # Observers must treat the session as read-only.  Observers that
+        # additionally define ``on_decision(kind, payload, now)`` receive
+        # the typed scheduler-decision stream (the flight recorder);
+        # payloads are only built when such an observer is attached.
         self.observers: List[object] = []
+        self._dec_n = -1                     # observer count at last scan
+        self._dec_fns: Tuple = ()            # cached on_decision callables
+        self._last_prefix_evictions = 0
         self._overlap = (DEFAULT_OVERLAP if self.cfg.overlap is None
                          else bool(self.cfg.overlap))
         self._streams: Dict[str, TransferStream] = {}   # beta rid -> stream
@@ -713,6 +729,35 @@ class ServeSession:
         req.to(state, self.now)
         if req.state != old:
             self._notify("on_transition", req, old, req.state, self.now)
+
+    @property
+    def _dec(self) -> Tuple:
+        """Cached ``on_decision`` callables of the attached observers.
+
+        Zero-overhead when unobserved: emission sites guard payload
+        construction with ``if self._dec:`` — with no decision observer
+        attached no event dict is ever allocated.  The scan re-runs only
+        when the observer count changes."""
+        obs = self.observers
+        if len(obs) != self._dec_n:
+            self._dec_n = len(obs)
+            self._dec_fns = tuple(
+                fn for fn in (getattr(o, "on_decision", None) for o in obs)
+                if fn is not None)
+        return self._dec_fns
+
+    @property
+    def decisions_enabled(self) -> bool:
+        """True when at least one observer records scheduler decisions
+        (policies use this to guard their own payload construction)."""
+        return bool(self._dec)
+
+    def record_decision(self, kind: str, payload: dict) -> None:
+        """Emit one typed scheduler-decision event to every decision
+        observer.  Public so policies (e.g. the elastic pool applier)
+        can record decisions the session core does not see."""
+        for fn in self._dec:
+            fn(kind, payload, self.now)
 
     # ---------------- event plumbing ----------------
     def _push(self, t: float, kind: str, payload) -> None:
@@ -956,6 +1001,10 @@ class ServeSession:
                 self.instances.append(inst)
                 label = "attach"
         self.pool_events.append((self.now, f"{label} {inst.iid}"))
+        if self._dec:
+            self.record_decision("scale", {"iid": inst.iid,
+                                           "action": label,
+                                           "direction": "up"})
         self.n_instances_peak = max(self.n_instances_peak,
                                     len(self.active_instances()))
         return inst
@@ -968,6 +1017,9 @@ class ServeSession:
             return
         inst.draining = True
         self.pool_events.append((self.now, f"drain {iid}"))
+        if self._dec:
+            self.record_decision("scale", {"iid": iid, "action": "drain",
+                                           "direction": "down"})
         self._maybe_retire(inst)
 
     def _stream_touches(self, iid: int) -> bool:
@@ -992,12 +1044,20 @@ class ServeSession:
         if not others:
             inst.draining = False
             self.pool_events.append((self.now, f"undrain {inst.iid}"))
+            if self._dec:
+                self.record_decision("scale", {
+                    "iid": inst.iid, "action": "undrain",
+                    "direction": "up"})
             return
         inst.draining = False
         inst.retired = True
         inst.segments[-1][1] = self.now
         self.backend.retire(inst.iid)
         self.pool_events.append((self.now, f"retire {inst.iid}"))
+        if self._dec:
+            self.record_decision("scale", {"iid": inst.iid,
+                                           "action": "retire",
+                                           "direction": "down"})
 
     def migrate(self, src_iid: int, dst_iid: int, max_micros: int) -> int:
         """Move up to ``max_micros`` queued (not in-flight) micro-requests
@@ -1007,6 +1067,8 @@ class ServeSession:
         the slot state) before it becomes runnable on the destination."""
         src, dst = self.instances[src_iid], self.instances[dst_iid]
         moved = 0
+        moved_rids: List[str] = []
+        moved_bytes = 0.0
 
         # a waiting beta has no KV yet (its handoff redirects to the new
         # home); anything started owns KV for every position < pos
@@ -1039,6 +1101,7 @@ class ServeSession:
                 nbytes = self.cost.kv_transfer_bytes(resident, mprec)
                 self.migration_bytes += nbytes
                 self.transfer_bytes += nbytes
+                moved_bytes += nbytes
                 if self.backend.virtual_clock:
                     delay = self.cost.kv_transfer_time(resident, mprec)
                     m.ready = max(m.ready, self.now + delay)
@@ -1046,12 +1109,17 @@ class ServeSession:
             m.iid = dst_iid
             q_dst.append(m)
             moved += 1
+            moved_rids.append(m.rid)
             # wake the destination when the micro actually becomes
             # runnable (a waiting beta is woken by release_beta instead)
             if m.ready != float("inf"):
                 self._push(max(self.now, m.ready), "kick", dst_iid)
         if moved:
             self.migrations += moved
+            if self._dec:
+                self.record_decision("migrate", {
+                    "src": src_iid, "dst": dst_iid, "moved": moved,
+                    "rids": moved_rids, "bytes": moved_bytes})
             self._maybe_retire(src)
         return moved
 
@@ -1231,6 +1299,11 @@ class ServeSession:
         self._notify("on_request", r, self.now)
         self.backend.register(r)
         shed_reason = self._admit(r)
+        if self._dec:
+            self.record_decision("admit", {
+                "rid": r.rid,
+                "verdict": "reject" if shed_reason is not None else "admit",
+                "reason": shed_reason})
         if shed_reason is not None:
             self._reject(r, shed_reason, arrival=arrival)
             return
@@ -1248,6 +1321,10 @@ class ServeSession:
                     self.backend.release(p)
                 if hasattr(self.policy, "on_cancel"):
                     self.policy.on_cancel(r.rid, self)
+                if self._dec:
+                    self.record_decision("admit", {
+                        "rid": r.rid, "verdict": "reject",
+                        "reason": "no free slots"})
                 self._reject(r, "no free slots", arrival=arrival)
                 return
             placed.append(sm)
@@ -1255,6 +1332,9 @@ class ServeSession:
         self.req_states[r.rid] = st
         self._open_requests += 1
         self._notify("on_placed", r, placements, self.now)
+        if self._dec:
+            self.record_decision("place", self._placement_payload(r,
+                                                                  placements))
         for inst_id, sm in placements:
             inst = self.instances[inst_id]
             # real backends: the final forward pass is not needed for the
@@ -1276,6 +1356,28 @@ class ServeSession:
                 self._micro_finished(sm)
                 continue
             self._maybe_start_batch(inst)
+
+    def _placement_payload(self, r: Request, placements) -> dict:
+        """Decision payload for a just-placed request: the spans chosen
+        plus (when the policy exposes them) the split alternatives and
+        candidate-instance scores the global scheduler *considered*."""
+        out = {
+            "rid": r.rid,
+            "micros": [{"iid": iid, "role": sm.mr.role,
+                        "start": sm.mr.start, "end": sm.mr.end,
+                        "prefill": sm.prefill_remaining,
+                        "decode": sm.decode_remaining, "pos": sm.pos,
+                        "waiting": sm.ready == float("inf")}
+                       for iid, sm in placements],
+        }
+        pl = getattr(self.policy, "last_placement", None)
+        if pl is not None:
+            out.update(phi=pl.phi, predicted_t1=pl.predicted_t1,
+                       predicted_t2=pl.predicted_t2, probes=pl.probes,
+                       trials=list(pl.trials),
+                       candidates=list(pl.candidates),
+                       overhead_s=pl.overhead_s)
+        return out
 
     # ---------------- batching ----------------
     def _work_meta(self, m: MicroState):
@@ -1351,7 +1453,8 @@ class ServeSession:
         return (arrival, m.mr.parent.rid)
 
     def _preempt_for_memory(self, inst: InstanceState,
-                            junior_to=None) -> bool:
+                            junior_to=None,
+                            cause: str = "memory") -> bool:
         """Free pages by evicting one micro-request's KV (vLLM-style
         recompute preemption): the *youngest* resident request loses its
         cache and re-queues as prefill from position 0.  Preemption only
@@ -1384,11 +1487,17 @@ class ServeSession:
                      and self._seniority(m) < self._seniority(victim)]
             if not older:
                 return False
+        evicted = victim.pos
         self.backend.on_preempt(victim)
         victim.shared_pages = 0      # preemption dropped its claim too
         self._requeue_for_recompute(inst, victim)
         self.preemptions += 1
         self.pool_events.append((self.now, f"preempt {victim.rid}"))
+        if self._dec:
+            self.record_decision("preempt", {
+                "rid": victim.rid, "req": victim.mr.parent.rid,
+                "iid": inst.iid, "cause": cause,
+                "evicted_tokens": evicted})
         return True
 
     def _requeue_for_recompute(self, inst: InstanceState,
@@ -1399,6 +1508,7 @@ class ServeSession:
         fresh claim is probed — a preempted request whose prefix stayed
         cached (pinned by a sibling, say) recomputes only the tail."""
         keep = m.shared_pages * (self.backend.page_size or 0)
+        m.recompute_hi = max(m.recompute_hi, m.pos)
         if m in inst.decode_q:
             inst.decode_q.remove(m)
             inst.prefill_q.append(m)
@@ -1470,6 +1580,16 @@ class ServeSession:
         decs = [by_rid[w.rid] for w in plan.decodes]
         if not grants and not decs:
             return False
+        if self._dec:
+            self.record_decision("batch", {
+                "iid": inst.iid,
+                "prefill": [[m.rid, g] for m, g in grants],
+                "decode": [m.rid for m in decs],
+                "predicted_latency": plan.predicted_latency,
+                "budget": getattr(plan, "budget", 0),
+                "slo_eff": getattr(plan, "slo_eff", 0.0),
+                "starved": plan.starved,
+                "cached_tokens": plan.cached_tokens})
         h = ExecHandle(inst.iid, grants, decs, plan, self.now)
         for m in h.micros:
             self._to(m.mr.parent,
@@ -1518,6 +1638,20 @@ class ServeSession:
         inst.busy_time += (res.device_time if res.device_time is not None
                            else res.latency)
         inst.scheduler.record(plan, res.latency)
+        if self._dec:
+            dev = (res.device_time if res.device_time is not None
+                   else res.latency)
+            # prefill entries carry [rid, granted, recomputed]: the
+            # recomputed slice (positions below the preemption/fallback
+            # high-water mark) lets the attribution analyzer charge it
+            # to preempt_recompute instead of useful prefill
+            self.record_decision("exec", {
+                "iid": iid, "t0": self.now - dev, "latency": res.latency,
+                "device_time": dev,
+                "prefill": [[m.rid, g,
+                             max(0, min(m.pos + g, m.recompute_hi) - m.pos)]
+                            for m, g in grants],
+                "decode": [m.rid for m in decs]})
         # prefill progress
         for m, g in grants:
             if m.cancelled:
@@ -1559,6 +1693,13 @@ class ServeSession:
             if m.decode_remaining <= 0:
                 inst.decode_q.remove(m)
                 self._micro_finished(m)
+        if self._dec:
+            ev = self.backend.prefix_evictions
+            if ev > self._last_prefix_evictions:
+                self.record_decision("evict", {
+                    "iid": iid,
+                    "count": ev - self._last_prefix_evictions})
+                self._last_prefix_evictions = ev
         if self.backend.virtual_clock:
             self._maybe_start_batch(inst)
         else:
@@ -1622,6 +1763,16 @@ class ServeSession:
             # alpha's final pass): nothing to hand off or run
             return
         self._to(beta.mr.parent, RequestState.HANDOFF)
+        if self._dec:
+            # recorded BEFORE destination-cache scaling: this is the
+            # policy's decision as made; replay feeds the same raw
+            # (ready-now, exposed, nbytes) back through this method
+            self.record_decision("handoff", {
+                "rid": beta.rid, "req": beta.mr.parent.rid,
+                "src": src.rid if src is not None else None,
+                "src_iid": src.iid if src is not None else None,
+                "dst_iid": beta.iid, "pos": beta.pos,
+                "ready": ready, "exposed": exposed, "nbytes": nbytes})
         # ---- prefix-cache hit on the DESTINATION ----
         # pages the beta's instance already caches for this prompt are
         # claimed into its slot and never cross the link; the modeled
@@ -1649,7 +1800,8 @@ class ServeSession:
             guard = self._seniority(beta)
             free = self.backend.free_frames(beta.iid)
             while (free is not None and free < need
-                   and self._preempt_for_memory(inst, junior_to=guard)):
+                   and self._preempt_for_memory(inst, junior_to=guard,
+                                                cause="handoff_import")):
                 free = self.backend.free_frames(beta.iid)
             if free is not None and free < need and inst.role != "decode":
                 # (a decode-only instance cannot recompute a prefix; its
@@ -1658,6 +1810,10 @@ class ServeSession:
                 beta.ready = self.now
                 self.pool_events.append(
                     (self.now, f"handoff-recompute {beta.rid}"))
+                if self._dec:
+                    self.record_decision("recompute", {
+                        "rid": beta.rid, "req": beta.mr.parent.rid,
+                        "iid": beta.iid, "cause": "handoff_budget"})
                 self._push(self.now, "kick", beta.iid)
                 return
         if self.backend.virtual_clock and beta.pos > 0:
@@ -1715,12 +1871,20 @@ class ServeSession:
                 add = stream.nbytes / len(stream.times)
                 stream.sent += add
                 self.transfer_bytes += add
+                if self._dec:
+                    self.record_decision("handoff_chunk", {
+                        "rid": stream.beta.rid,
+                        "i": stream.chunk_i - 1, "nbytes": add})
                 self._push(stream.times[stream.chunk_i], "xfer", stream)
                 return
             # final chunk: account the exact remainder so overlap-on
             # totals are bit-identical to the synchronous path
             self.transfer_bytes += stream.nbytes - stream.sent
             self.transfer_exposed += stream.exposed
+            if self._dec:
+                self.record_decision("handoff_chunk", {
+                    "rid": stream.beta.rid, "i": stream.chunk_i - 1,
+                    "nbytes": stream.nbytes - stream.sent})
             self._finish_stream(stream, ready=stream.t_ready)
             return
         # real backend: pump one piece (import chunk k while the
@@ -1736,6 +1900,11 @@ class ServeSession:
             self._finish_stream(stream, ready=self.now)
             return
         self.transfer_bytes += nb
+        if self._dec:
+            stream.chunk_i += 1
+            self.record_decision("handoff_chunk", {
+                "rid": stream.beta.rid, "i": stream.chunk_i - 1,
+                "nbytes": nb})
         # a chunk imported while the destination had no batch in
         # flight is exposed wait; one hidden behind compute is not
         if not self.instances[stream.beta.iid].inflight:
@@ -1784,6 +1953,10 @@ class ServeSession:
         self._requeue_for_recompute(inst, beta)
         beta.ready = self.now
         self.pool_events.append((self.now, f"handoff-recompute {beta.rid}"))
+        if self._dec:
+            self.record_decision("recompute", {
+                "rid": beta.rid, "req": beta.mr.parent.rid,
+                "iid": beta.iid, "cause": "stream_oom"})
         self._push(self.now, "kick", beta.iid)
 
     # ---------------- metrics ----------------

@@ -220,6 +220,26 @@ class EngineBackend(Backend):
             return eng.kv_precision
         return self._precision_for(iid)
 
+    def describe(self) -> Dict[str, object]:
+        """Static substrate config for the flight recorder's ``meta``
+        event (a replay of an engine log runs on a SimBackend built
+        over the same cost model)."""
+        return {
+            "kind": "engine",
+            "arch": self.cfg.name,
+            "n_slots": self.n_slots,
+            "max_len": self.max_len,
+            "paged": self.paged,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "prefix_cache": self.prefix_cache,
+            "transfer_chunk": self.transfer_chunk,
+            "max_chunk": self.max_chunk,
+            "kv_precision": (self.kv_precision
+                             if isinstance(self.kv_precision, str)
+                             else "mixed"),
+        }
+
     def gauges(self, iid: int) -> Dict[str, float]:
         """Engine-side occupancy sample for /metrics: slot and KV-page
         utilisation, per-precision page occupancy, quantized-handoff
@@ -230,6 +250,7 @@ class EngineBackend(Backend):
         out: Dict[str, float] = {
             "slots_free": float(eng.n_free),
             "slots_total": float(self.n_slots),
+            "kv_bytes_moved": float(self.kv_bytes_moved),
         }
         if self.paged:
             out["kv_pages_free"] = float(eng.free_pages)

@@ -89,6 +89,43 @@ def report(m: SessionMetrics, label: str) -> None:
                   f"{c.attainment:>6.2f}")
 
 
+def _attach_recorder(session: ServeSession, args):
+    """Flight recorder for batch runs: on when any of --decision-log /
+    --perfetto / --attribution asks for its output."""
+    if not (args.decision_log or args.perfetto or args.attribution):
+        return None
+    from repro.serving.flightrecorder import FlightRecorder
+    rec = FlightRecorder(capacity=args.recorder_capacity,
+                         sink=args.decision_log)
+    rec.attach(session)
+    return rec
+
+
+def _finish_recorder(rec, args) -> None:
+    if rec is None:
+        return
+    rec.close()
+    events = rec.events()
+    if args.decision_log:
+        print(f"decision log -> {args.decision_log} "
+              f"({len(events)} events kept, {rec.dropped} aged out of "
+              f"the ring)")
+    if args.perfetto:
+        from repro.serving.flightrecorder import export_chrome_trace
+        n = export_chrome_trace(events, args.perfetto)
+        print(f"perfetto trace -> {args.perfetto} ({n} trace events)")
+    if args.attribution:
+        from repro.serving.attribution import analyze
+        report = analyze(events)
+        print("== SLO-miss attribution ==")
+        print(f"{'class':<12} {'n':>4} {'ttft_miss':>9} {'tbt_miss':>8} "
+              f"{'top_cause':>20}")
+        for name in sorted(report.per_class):
+            c = report.per_class[name]
+            print(f"{name:<12} {c.n:>4} {c.ttft_misses:>9} "
+                  f"{c.tbt_misses:>8} {c.top_cause or '-':>20}")
+
+
 def serve_engine(args) -> SessionMetrics:
     import jax
     from repro.configs import get_smoke_config
@@ -121,7 +158,9 @@ def serve_engine(args) -> SessionMetrics:
         n_instances=args.instances, slo=args.slo,
         admission=args.admission, open_loop=args.open_loop,
         overlap=True if args.overlap else None))
+    rec = _attach_recorder(session, args)
     m = session.run(reqs)
+    _finish_recorder(rec, args)
     report(m, f"engine backend ({cfg.name}), "
               f"{'open' if args.open_loop else 'closed'}-loop, "
               f"admission={'on' if args.admission else 'off'}, "
@@ -169,7 +208,9 @@ def serve_sim(args) -> SessionMetrics:
         n_instances=args.instances, slo=args.slo,
         admission=args.admission,
         overlap=True if args.overlap else None))
+    rec = _attach_recorder(session, args)
     m = session.run(reqs)
+    _finish_recorder(rec, args)
     report(m, f"sim backend, {args.workload} @ {args.qps} qps, "
               f"policy={args.policy}, "
               f"admission={'on' if args.admission else 'off'}, "
@@ -188,15 +229,19 @@ def serve_http(args) -> None:
         admission=args.admission, overlap=args.overlap or None,
         prefix_cache=args.prefix_cache, page_size=args.page_size,
         pages_per_instance=args.pages_per_instance,
-        trace_path=args.trace_log)
+        trace_path=args.trace_log,
+        decision_log=args.decision_log)
     server = ServingServer(cfg)
     server.start()
     print(f"serving {cfg.backend} backend on http://{cfg.host}:{server.port}")
     print(f"  POST /v1/completions | /v1/chat/completions   (SSE: "
           f'"stream": true; classes: "slo": interactive|standard|batch)')
-    print(f"  GET  /metrics /healthz /v1/models")
+    print(f"  GET  /metrics /healthz /v1/models "
+          f"/debug/attribution /debug/trace")
     if args.trace_log:
         print(f"  trace spans -> {args.trace_log}")
+    if args.decision_log:
+        print(f"  decision log -> {args.decision_log}")
     server.serve_forever()
 
 
@@ -211,6 +256,19 @@ def main(argv=None):
     ap.add_argument("--port", type=int, default=8000)
     ap.add_argument("--trace-log", default=None,
                     help="append per-request span JSONL here (--http)")
+    ap.add_argument("--decision-log", default=None,
+                    help="write every scheduler decision as JSONL here "
+                         "(the flight-recorder event stream; replayable "
+                         "with repro.sim.replay)")
+    ap.add_argument("--perfetto", default=None,
+                    help="export a Chrome/Perfetto trace JSON of the run "
+                         "here (batch runs; for --http use /debug/trace)")
+    ap.add_argument("--attribution", action="store_true",
+                    help="print the per-class SLO-miss attribution "
+                         "summary after a batch run")
+    ap.add_argument("--recorder-capacity", type=int, default=1 << 20,
+                    help="flight-recorder ring size (events kept in "
+                         "memory for --perfetto/--attribution)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced model + tiny trace (CI-sized)")
     ap.add_argument("--open-loop", action="store_true",

@@ -9,6 +9,8 @@ transfer encoding for SSE, and JSON bodies shaped like the OpenAI API:
     GET  /v1/models             served model listing
     GET  /metrics               Prometheus text exposition
     GET  /healthz               liveness (503 once the driver is down)
+    GET  /debug/attribution     SLO-miss attribution over recorded events
+    GET  /debug/trace           Perfetto/Chrome trace of recorded events
 
 ``"slo"`` is the DynaServe extension field: ``interactive`` /
 ``standard`` / ``batch`` attaches the paper's per-class TTFT/TBT
@@ -150,6 +152,10 @@ class ServerConfig:
     tick_events: int = 256           # driver pump granularity
     trace_path: Optional[str] = None  # JSONL span log (None: in-memory ring)
     api_keys: Optional[Dict[str, KeyQuota]] = None
+    # scheduler flight recorder (decision log + /debug endpoints)
+    flight_recorder: bool = True
+    recorder_capacity: int = 65536   # in-memory event ring size
+    decision_log: Optional[str] = None  # JSONL sink for every event
     # engine-backend sizing
     engine_slots: int = 8
     engine_max_len: int = 192
@@ -322,6 +328,13 @@ class ServingServer:
         self.tracer = Tracer(sink=self.cfg.trace_path)
         self.session = session if session is not None \
             else make_session(self.cfg)
+        self.recorder = None
+        if self.cfg.flight_recorder:
+            from repro.serving.flightrecorder import FlightRecorder
+            self.recorder = FlightRecorder(
+                capacity=self.cfg.recorder_capacity,
+                sink=self.cfg.decision_log)
+            self.recorder.attach(self.session)
         self.driver = SessionDriver(self.session, hub=self.hub,
                                     tracer=self.tracer,
                                     tick_events=self.cfg.tick_events)
@@ -368,6 +381,8 @@ class ServingServer:
             self._loop.close()
             self._loop = self._thread = self._server = None
         self.driver.stop()
+        if self.recorder is not None:
+            self.recorder.close()
 
     def serve_forever(self) -> None:
         """Blocking run (the ``--http`` launcher); Ctrl-C to stop."""
@@ -438,6 +453,25 @@ class ServingServer:
             writer.write(_head(
                 200, "text/plain; version=0.0.4; charset=utf-8",
                 length=len(text)) + text)
+            return 200
+        if path in ("/debug/attribution", "/debug/trace"):
+            if method != "GET":
+                writer.write(_error(405, "GET only"))
+                return 405
+            if self.recorder is None:
+                writer.write(_error(404, "flight recorder disabled "
+                                         "(cfg.flight_recorder=False)"))
+                return 404
+            events = self.recorder.events()
+            if path == "/debug/attribution":
+                from repro.serving.attribution import analyze, publish
+                report = analyze(events)
+                publish(report, self.registry)
+                writer.write(_json_response(
+                    200, report.to_json(include_requests=False)))
+            else:
+                from repro.serving.flightrecorder import to_chrome_trace
+                writer.write(_json_response(200, to_chrome_trace(events)))
             return 200
         if path == "/v1/models":
             writer.write(_json_response(200, {

@@ -298,6 +298,14 @@ class ServingMetrics:
         self.preemptions = r.gauge(
             "dynaserve_preemptions",
             "KV recompute preemptions (session counter)")
+        self.scale_events = r.counter(
+            "dynaserve_scale_events_total",
+            "Elastic pool scale events by direction",
+            labels=("direction",))
+        self.preempt_causes = r.counter(
+            "dynaserve_preemptions_total",
+            "Preemptions and recompute-requeues by cause",
+            labels=("cause",))
         # per-request progress state (arrival + last token time), pruned
         # at terminal transitions so memory stays bounded
         self._progress: Dict[str, List[float]] = {}
@@ -329,6 +337,14 @@ class ServingMetrics:
             self.ttft.observe(max(0.0, now - arrival), slo_class=cls)
         else:
             self.tbt.observe(max(0.0, now - last), slo_class=cls)
+
+    def on_decision(self, kind: str, payload: dict, now: float) -> None:
+        if kind == "scale":
+            self.scale_events.inc(
+                direction=str(payload.get("direction", "up")))
+        elif kind in ("preempt", "recompute"):
+            self.preempt_causes.inc(
+                cause=str(payload.get("cause", kind)))
 
     # ---- polled gauges (driver thread) ----
     def sample(self, session) -> None:

@@ -11,14 +11,19 @@ request's life into named spans on the session clock —
 
 and at the terminal transition writes one JSON object per request to the
 sink: ``{"trace_id", "rid", "slo_class", "outcome", "arrival", "end",
-"n_tokens", "spans": [{"name", "start", "end", "dur"}, ...]}``.  The
+"n_tokens", "spans": [{"name", "start", "end", "dur"}, ...], "events":
+[{"t", "kind", ...}, ...]}`` — ``events`` carries mid-flight scheduler
+decisions (preemptions, recompute-requeues) that hit the request.  The
 HTTP front door mints a ``trace_id`` per request (also returned in the
 ``x-trace-id`` response header) and registers it here, so a client can
 grep the trace log for exactly the request it saw.
 
 The sink is either a callable (dict -> None) or a file path opened in
 append mode; with no sink, traces accumulate on ``tracer.finished`` (a
-bounded deque) for tests and ad-hoc inspection.
+bounded deque) for tests and ad-hoc inspection.  Pool-level decisions
+that belong to no single request (prefix-cache evictions, elastic
+scale events, migrations, controller actions) land on
+``tracer.pool_events``, another bounded ring.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ _TERMINAL = ("done", "cancelled", "rejected")
 
 
 class _Trace:
-    __slots__ = ("trace_id", "arrival", "marks", "first_token", "n_tokens")
+    __slots__ = ("trace_id", "arrival", "marks", "first_token", "n_tokens",
+                 "events")
 
     def __init__(self, trace_id: str, arrival: float):
         self.trace_id = trace_id
@@ -41,6 +47,9 @@ class _Trace:
         self.marks: Dict[str, float] = {}     # state -> first time entered
         self.first_token: Optional[float] = None
         self.n_tokens = 0
+        # scheduler decisions that hit this request mid-flight
+        # (preemptions, recompute-requeues), kept on the span record
+        self.events: List[dict] = []
 
 
 class Tracer:
@@ -50,8 +59,16 @@ class Tracer:
                  keep: int = 256):
         self._lock = threading.Lock()
         self._live: Dict[str, _Trace] = {}
+        # rids pre-registered before their on_request arrived; bounded so
+        # a front door that mints ids for never-submitted requests can't
+        # grow _live without limit
+        self._orphans: collections.deque = collections.deque()
+        self._keep = keep
         self._seq = 0
         self.finished: collections.deque = collections.deque(maxlen=keep)
+        # pool-level decisions (evictions, scale, migrations) that have no
+        # single owning request; bounded ring like ``finished``
+        self.pool_events: collections.deque = collections.deque(maxlen=keep)
         self._path: Optional[str] = None
         self._emit: Optional[Callable[[dict], None]] = None
         if callable(sink):
@@ -71,6 +88,12 @@ class Tracer:
                 tr = _Trace(trace_id, 0.0)
                 tr.arrival = float("nan")
                 self._live[rid] = tr
+                self._orphans.append(rid)
+                while len(self._orphans) > self._keep:
+                    old = self._orphans.popleft()
+                    cur = self._live.get(old)
+                    if cur is not None and cur.arrival != cur.arrival:
+                        del self._live[old]
 
     # ---- session observer callbacks (driver thread) ----
     def on_request(self, req, now: float) -> None:
@@ -110,6 +133,20 @@ class Tracer:
                 tr.first_token = now
             tr.n_tokens += 1
 
+    def on_decision(self, kind: str, payload: dict, now: float) -> None:
+        if kind in ("preempt", "recompute"):
+            rid = payload.get("req") or payload.get("rid")
+            with self._lock:
+                tr = self._live.get(rid)
+                if tr is not None and len(tr.events) < 64:
+                    ev = {"t": now, "kind": kind}
+                    for k in ("cause", "iid", "evicted_tokens", "keep"):
+                        if k in payload:
+                            ev[k] = payload[k]
+                    tr.events.append(ev)
+        elif kind in ("evict", "scale", "migrate", "pool_action"):
+            self.pool_events.append({"t": now, "kind": kind, **payload})
+
     # ---- span assembly ----
     def _close(self, req, tr: _Trace, outcome: str, end: float) -> dict:
         m = tr.marks
@@ -145,4 +182,5 @@ class Tracer:
             "end": end,
             "n_tokens": tr.n_tokens,
             "spans": spans,
+            "events": list(tr.events),
         }

@@ -24,6 +24,11 @@ from repro.core.session import MicroState as SimMicro, queued_view
 
 class BasePolicy:
     last_overhead = 0.0
+    # the GlobalScheduler Placement behind the most recent place() call
+    # (None for policies/paths that never run Algorithm 1) — the session
+    # reads it to record the considered split alternatives and probe
+    # scores into the flight-recorder "place" event
+    last_placement = None
 
     def role_of(self, iid: int, n: int) -> str:
         return "unified"
@@ -151,6 +156,7 @@ class DynaServePolicy(BasePolicy):
                 for i in sim.pool_instances()]
 
     def place(self, r: Request, sim, now: float):
+        self.last_placement = None
         if self.split_mode == "none":
             iid = self._rr % len(sim.instances)
             self._rr += 1
@@ -167,6 +173,7 @@ class DynaServePolicy(BasePolicy):
             return [(ia, a), (ib, b)]
         pl = self.gs.schedule(r, self._views(sim, r))
         self.last_overhead = pl.overhead_s
+        self.last_placement = pl
         out = []
         # clamp the *executed* token span to the true length (the predictor
         # margin only affects the split decision, not real work)
@@ -265,6 +272,18 @@ class ElasticDynaServePolicy(DynaServePolicy):
 
     def on_pool_check(self, sim, now: float) -> None:
         for act in self.controller.decide(self._stats(sim), now):
+            if sim.decisions_enabled:
+                payload = {"action": type(act).__name__,
+                           "reason": getattr(act, "reason", ""),
+                           "signals": dict(self.controller.last_signals)}
+                for fld in ("iid", "src", "dst", "max_micros", "bias"):
+                    if hasattr(act, fld):
+                        payload[fld] = getattr(act, fld)
+                if isinstance(act, ScaleUp):
+                    # the newcomer joins at the pool's current role
+                    # target; replay needs that value to pin the action
+                    payload["target_bias"] = self.controller.target_bias
+                sim.record_decision("pool_action", payload)
             if isinstance(act, ScaleUp):
                 inst = sim.add_instance()
                 # join at the pool's current role target so pick_pair

@@ -162,6 +162,25 @@ class SimBackend(Backend):
         self._tries: Dict[int, PrefixCache] = {}
         self._claims: Dict[str, object] = {}
 
+    def describe(self) -> Dict[str, object]:
+        """Static substrate config for the flight recorder's ``meta``
+        event; ``repro.sim.replay`` rebuilds a SimBackend from it."""
+        il = self.interleave
+        return {
+            "kind": "sim",
+            "arch": getattr(self.cost.cfg, "name", None),
+            "page_size": self.page_size,
+            "pages_per_instance": self.pages_per_instance,
+            "prefix_cache": self.prefix_cache,
+            "host_overhead": self.host_overhead,
+            "kv_precision": (self.kv_precision
+                             if isinstance(self.kv_precision, str)
+                             else "mixed"),
+            "interleave": None if il is None else {
+                "seed": il.seed, "window": il.window,
+                "width": il.width, "mode": il.mode},
+        }
+
     # ---------------- pool lifecycle ----------------
     def spawn(self, iid: int) -> None:
         if self.prefix_cache and iid not in self._tries:

@@ -1,0 +1,364 @@
+"""Flight recorder, SLO-miss attribution, and counterfactual replay.
+
+Covers the observability acceptance criteria: zero-allocation when no
+observer wants decisions, deterministic event streams on the virtual
+clock, schema validation (hand-rolled, no jsonschema), Perfetto/Chrome
+trace export structure, bounded ring memory, attribution components
+summing to the observed TTFT/latency, replay reproducing recorded
+per-request token timelines bit-identically at several seeds, and the
+sim-vs-engine projection parity of the decision stream.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import A100, BatchCostModel
+from repro.core.request import Request
+from repro.core.session import ServeSession, SessionConfig
+from repro.data.workloads import generate_trace
+from repro.serving.attribution import COMPONENTS, analyze, publish
+from repro.serving.flightrecorder import (
+    FlightRecorder, to_chrome_trace, token_timelines, validate_event,
+    validate_log,
+)
+from repro.serving.metrics import MetricsRegistry
+from repro.sim.policies import DynaServePolicy
+from repro.sim.replay import (
+    ReplayError, ReplayLog, counterfactual, replay, verify_replay,
+)
+from repro.sim.simulator import SimBackend
+
+MIX = {"interactive": 0.5, "standard": 0.3, "batch": 0.2}
+
+
+@pytest.fixture(scope="module")
+def cost():
+    return BatchCostModel(get_config("qwen2.5-14b"), A100)
+
+
+def _session(cost, **cfg_kw):
+    kw = dict(n_instances=2, open_loop=True)
+    kw.update(cfg_kw)
+    return ServeSession(SimBackend(cost), DynaServePolicy(cost),
+                        SessionConfig(**kw))
+
+
+def _record(cost, qps=4.0, duration=8.0, seed=0, **cfg_kw):
+    sess = _session(cost, **cfg_kw)
+    rec = FlightRecorder(capacity=1 << 20)
+    rec.attach(sess)
+    m = sess.run(generate_trace("burstgpt", qps, duration, seed=seed,
+                                slo_mix=MIX))
+    return rec.events(), m
+
+
+# ---------------------------------------------------------------------------
+# zero overhead when unobserved
+# ---------------------------------------------------------------------------
+def test_no_decision_payloads_without_observer(cost):
+    """A session whose observers define no ``on_decision`` must never
+    build decision payloads: ``record_decision`` is patched to raise,
+    and the run still completes."""
+
+    class TokenOnly:                     # legacy observer shape
+        def on_request(self, req, now):
+            pass
+
+        def on_token(self, req, now):
+            pass
+
+    sess = _session(cost)
+    sess.observers.append(TokenOnly())
+    assert sess.decisions_enabled is False
+
+    def boom(kind, payload):             # pragma: no cover - must not run
+        raise AssertionError(f"decision {kind!r} emitted unobserved")
+
+    sess.record_decision = boom
+    m = sess.run(generate_trace("burstgpt", 3.0, 4.0, seed=1, slo_mix=MIX))
+    assert m.completed == m.offered
+
+
+def test_decisions_enabled_flips_with_observer(cost):
+    sess = _session(cost)
+    assert not sess.decisions_enabled
+    rec = FlightRecorder()
+    rec.attach(sess)
+    assert sess.decisions_enabled
+    sess.observers.remove(rec)
+    assert not sess.decisions_enabled
+
+
+# ---------------------------------------------------------------------------
+# event stream: determinism, schema, ring bound
+# ---------------------------------------------------------------------------
+def test_event_stream_deterministic_on_sim(cost):
+    """Two identical virtual-clock runs record identical event streams
+    (the basis for replay parity).  ``overhead_s`` is the one wall-clock
+    observation in the log (scheduling compute time) and is excluded."""
+
+    def strip(events):
+        out = []
+        for e in events:
+            d = {k: v for k, v in e["data"].items() if k != "overhead_s"}
+            out.append({**e, "data": d})
+        return out
+
+    a, _ = _record(cost, seed=2)
+    b, _ = _record(cost, seed=2)
+    assert strip(a) == strip(b)
+
+
+def test_recorded_log_validates(cost):
+    events, _ = _record(cost, seed=0)
+    assert validate_log(events) == []
+    kinds = {e["kind"] for e in events}
+    assert {"meta", "request", "admit", "place", "batch", "exec",
+            "transition", "token"} <= kinds
+
+
+def test_validator_rejects_malformed():
+    ok = {"seq": 1, "t": 0.0, "kind": "token", "data": {"rid": "r"}}
+    assert validate_event(ok) == []
+    assert validate_event({"seq": 1, "t": 0.0, "kind": "nope", "data": {}})
+    assert validate_event({"t": 0.0, "kind": "token", "data": {"rid": "r"}})
+    # bool is not an acceptable int, wrong payload types fail
+    bad = {"seq": 2, "t": 0.0, "kind": "evict",
+           "data": {"iid": True, "count": 1}}
+    assert validate_event(bad)
+    # seq must be strictly increasing
+    assert validate_event(ok, prev_seq=1)
+    assert validate_log([]) == ["empty log"]
+
+
+def test_ring_buffer_bounds_memory(cost):
+    sess = _session(cost)
+    rec = FlightRecorder(capacity=64)
+    rec.attach(sess)
+    sess.run(generate_trace("burstgpt", 4.0, 6.0, seed=0, slo_mix=MIX))
+    events = rec.events()
+    assert len(events) == 64
+    assert rec.dropped > 0
+    # the ring keeps the newest events, still monotonically sequenced
+    seqs = [e["seq"] for e in events]
+    assert seqs == sorted(seqs)
+
+
+def test_sink_receives_full_log(cost, tmp_path):
+    path = tmp_path / "decisions.jsonl"
+    sess = _session(cost)
+    rec = FlightRecorder(capacity=64, sink=str(path))
+    rec.attach(sess)
+    sess.run(generate_trace("burstgpt", 3.0, 4.0, seed=4, slo_mix=MIX))
+    rec.close()
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(lines) == 64 + rec.dropped     # ring kept only the tail
+    assert validate_log(lines) == []
+
+
+# ---------------------------------------------------------------------------
+# Perfetto / chrome trace export
+# ---------------------------------------------------------------------------
+def test_chrome_trace_structure(cost):
+    events, _ = _record(cost, seed=0)
+    trace = to_chrome_trace(events)
+    assert trace["displayTimeUnit"] == "ms"
+    evs = trace["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert {"M", "X", "b", "e"} <= phases
+    lanes = {e["tid"] for e in evs if e["ph"] == "X"}
+    assert any(str(t).startswith("instance-") for t in lanes)
+    for e in evs:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0 and e["ts"] >= 0
+    # async request spans pair up
+    b = sum(1 for e in evs if e["ph"] == "b")
+    assert b > 0 and b == sum(1 for e in evs if e["ph"] == "e")
+    json.dumps(trace)                     # must be JSON-serialisable
+
+
+# ---------------------------------------------------------------------------
+# SLO-miss attribution
+# ---------------------------------------------------------------------------
+def test_attribution_components_sum_to_observed(cost):
+    """Per request, the TTFT decomposition sums to the observed TTFT and
+    the total decomposition to the observed last-token latency (within
+    1%, acceptance criterion; construction is exact)."""
+    events, _ = _record(cost, qps=6.0, duration=10.0, seed=7)
+    report = analyze(events)
+    assert report.requests
+    for r in report.requests:
+        if r.ttft is not None:
+            s = sum(r.ttft_components.values())
+            assert s == pytest.approx(r.ttft, rel=0.01, abs=1e-9)
+        if r.latency is not None:
+            s = sum(r.total_components.values())
+            assert s == pytest.approx(r.latency, rel=0.01, abs=1e-9)
+        assert set(r.ttft_components) <= set(COMPONENTS)
+
+
+def test_attribution_publishes_prometheus_gauges(cost):
+    events, _ = _record(cost, qps=6.0, duration=8.0, seed=7)
+    report = analyze(events)
+    reg = MetricsRegistry()
+    publish(report, reg)
+    text = reg.render()
+    assert "dynaserve_slo_miss_attribution_seconds" in text
+    assert "dynaserve_slo_misses" in text
+
+
+# ---------------------------------------------------------------------------
+# replay: record == replay, counterfactual overrides
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_replay_reproduces_token_timelines(cost, seed):
+    events, _ = _record(cost, seed=seed)
+    rep = verify_replay(events)
+    assert rep["ok"], rep["mismatched"][:3]
+    assert rep["max_abs_diff"] == 0.0
+    assert rep["n_requests"] > 0
+
+
+def test_replay_parity_under_paging_and_admission(cost):
+    """Preemptions, recompute-requeues and admission rejects must all
+    replay bit-exactly from their recorded decisions."""
+    be = SimBackend(cost, page_size=64, pages_per_instance=220)
+    sess = ServeSession(be, DynaServePolicy(cost),
+                        SessionConfig(n_instances=2, open_loop=True,
+                                      admission=True))
+    rec = FlightRecorder(capacity=1 << 20)
+    rec.attach(sess)
+    sess.run(generate_trace("burstgpt", 8.0, 6.0, seed=5, slo_mix=MIX))
+    events = rec.events()
+    assert any(e["kind"] == "preempt" for e in events)
+    rep = verify_replay(events)
+    assert rep["ok"] and rep["max_abs_diff"] == 0.0
+
+
+def test_replay_parity_elastic_pool(cost):
+    """Elastic runs replay too: recorded pool actions (scale, migrate,
+    role bias) re-apply at the recorded check times, so the replay pool
+    evolves identically."""
+    from repro.core.elastic import ElasticConfig
+    from repro.sim.policies import ElasticDynaServePolicy
+
+    pol = ElasticDynaServePolicy(
+        cost, elastic=ElasticConfig(min_instances=1, max_instances=4))
+    sess = ServeSession(SimBackend(cost), pol,
+                        SessionConfig(n_instances=2, open_loop=True))
+    rec = FlightRecorder(capacity=1 << 20)
+    rec.attach(sess)
+    sess.run(generate_trace("burstgpt", 8.0, 10.0, seed=9,
+                            slo_mix={"interactive": 0.6, "standard": 0.4}))
+    events = rec.events()
+    assert any(e["kind"] == "scale" for e in events)
+    assert any(e["kind"] == "pool_action" for e in events)
+    rep = verify_replay(events)
+    assert rep["ok"] and rep["max_abs_diff"] == 0.0
+
+
+def test_replay_strict_rejects_prefix_cache_logs(cost):
+    be = SimBackend(cost, page_size=32, pages_per_instance=4096,
+                    prefix_cache=True)
+    sess = ServeSession(be, DynaServePolicy(cost),
+                        SessionConfig(n_instances=2, open_loop=True))
+    rec = FlightRecorder(capacity=1 << 20)
+    rec.attach(sess)
+    sess.run([Request(f"r{i}", i * 0.1, 128, 8) for i in range(4)])
+    with pytest.raises(ReplayError):
+        replay(rec.events())
+
+
+def test_counterfactual_override_changes_one_decision(cost):
+    events, _ = _record(cost, qps=6.0, duration=8.0, seed=3)
+    log = ReplayLog.parse(events)
+    split = next((rid for rid, p in log.placements.items()
+                  if len(p["micros"]) == 2), None)
+    assert split is not None, "trace produced no split placements"
+    cf = counterfactual(log, {split: {"split_at": 1 << 30}})
+    assert cf["baseline"]["completed"] == cf["override"]["completed"]
+    # forcing the split whole is a different world: some timeline moved
+    base = replay(log).token_times
+    over = replay(log, overrides={split: {"split_at": 1 << 30}}).token_times
+    assert base != over
+
+
+# ---------------------------------------------------------------------------
+# sim vs engine: the decision stream projects identically
+# ---------------------------------------------------------------------------
+def _projection(events):
+    """Clock-independent view of the decision stream: what was decided,
+    for whom, on which instance — not when."""
+    out = []
+    for e in events:
+        k, d = e["kind"], e["data"]
+        if k == "admit":
+            out.append((k, d["rid"], d["verdict"]))
+        elif k == "place":
+            out.append((k, d["rid"], tuple(
+                (m["iid"], m["role"], m["start"], m["end"])
+                for m in d["micros"])))
+        elif k == "transition":
+            out.append((k, d["rid"], d["new"]))
+        elif k == "handoff":
+            out.append((k, d["req"], d["src_iid"], d["dst_iid"], d["pos"]))
+    return out
+
+
+def test_sim_vs_engine_decision_projection():
+    """The same serial workload through both backends yields the same
+    admission verdicts, placements (instances + split points) and
+    lifecycle transitions — times differ (virtual vs wall clock), the
+    decisions must not."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.engine.backend import EngineBackend
+    from repro.models.model import init_params
+
+    cfg = get_smoke_config("qwen2.5-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    backend = EngineBackend(cfg, params, n_slots=8, max_len=128)
+    rng = np.random.default_rng(11)
+    lens = [(int(rng.integers(12, 40)), int(rng.integers(4, 9)))
+            for _ in range(4)]
+
+    def serial(session):
+        # one request at a time: the pool is idle at every placement, so
+        # the (shared) cost model fully determines each decision
+        for i, (p, d) in enumerate(lens):
+            if session.backend.virtual_clock:
+                h = session.generate(prompt_len=p, decode_len=d,
+                                     rid=f"s{i}")
+            else:
+                prompt = np.arange(p, dtype=np.int32) % cfg.vocab_size
+                h = session.generate(prompt, d, rid=f"s{i}")
+            assert len(list(h)) == d
+
+    eng_sess = ServeSession(backend, DynaServePolicy(backend.cost),
+                            SessionConfig(n_instances=2))
+    eng_rec = FlightRecorder()
+    eng_rec.attach(eng_sess)
+    serial(eng_sess)
+
+    sim_sess = ServeSession(SimBackend(backend.cost),
+                            DynaServePolicy(backend.cost),
+                            SessionConfig(n_instances=2))
+    sim_rec = FlightRecorder()
+    sim_rec.attach(sim_sess)
+    serial(sim_sess)
+
+    assert _projection(sim_rec.events()) == _projection(eng_rec.events())
+    assert validate_log(eng_rec.events()) == []
+
+
+# ---------------------------------------------------------------------------
+# token timelines helper
+# ---------------------------------------------------------------------------
+def test_token_timelines_match_session_metrics(cost):
+    events, m = _record(cost, seed=6)
+    tls = token_timelines(events)
+    assert sum(len(v) for v in tls.values()) == m.tokens_total
+    for ts in tls.values():
+        assert ts == sorted(ts)
