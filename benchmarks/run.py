@@ -33,6 +33,7 @@ MODULES = [
     "online_serving",
     "prefix_reuse",
     "quantized_kv",
+    "sharded_scale",
     "http_serving",
     "attribution",
     "kernel_bench",

@@ -1,0 +1,158 @@
+"""Pool width vs shard width under a fixed device budget.
+
+DynaServe's elastic pool gains a second axis with sharded instances:
+the same N devices can run N 1-device instances (maximum placement
+parallelism) or N/w w-device TP shards (each instance w-ish times
+faster per pass).  This benchmark sweeps that trade at a fixed
+4-device budget on a large model whose per-pass latency busts a tight
+TBT SLO at width 1:
+
+  * ``4x tp1`` — four 1-device instances: admission control load-sheds
+    (no width can hold the per-pass SLO)
+  * ``2x tp2`` / ``1x tp4`` — the same devices as TP shards: per-pass
+    latency drops by the TP speedup and the trace becomes servable
+
+It then checks the two guardrails: a small model at width 1 is
+*byte-identical* to the pre-sharding backend (no goodput regression
+from the width plumbing), and the elastic controller actually executes
+at least one width<->count trade (MergeInstances) when a loaded pool
+is pinned at its member cap.
+
+CPU-only, analytic cost model:
+
+  PYTHONPATH=src python benchmarks/sharded_scale.py [--smoke]
+"""
+import argparse
+
+import numpy as np
+
+try:
+    from benchmarks.common import Csv, cost_for       # python -m benchmarks.run
+except ImportError:
+    from common import Csv, cost_for                  # direct script run
+
+from repro.core.elastic import ElasticConfig
+from repro.core.request import Request, SLO_CLASSES
+from repro.core.session import ServeSession, SessionConfig
+from repro.data.workloads import generate_trace
+from repro.sim.policies import DynaServePolicy, ElasticDynaServePolicy
+from repro.sim.simulator import SimBackend
+
+DEVICE_BUDGET = 4
+LARGE = "qwen2.5-72b"
+SMALL = "qwen2.5-14b"
+# standard class (ttft=2.0s / tbt=250ms) on the 72B model: one bf16
+# pass moves ~145 GB of weights, ~89 ms at A100 bandwidth, so a
+# 1-device instance prefills only ~280 tokens per 250 ms pass — a
+# 1600-2800-token prompt busts the 2 s TTFT bound the moment any queue
+# forms, and admission load-sheds.  TP=2/4 shards the weight read,
+# multiplying the per-pass budget, and the same trace serves fully.
+LARGE_SLO = SLO_CLASSES["standard"]
+
+
+def large_model_trace(qps, duration, seed=0, p_lo=1600, p_hi=2800):
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    while t < duration:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration:
+            break
+        p = int(rng.integers(p_lo, p_hi))
+        d = int(rng.integers(32, 96))
+        reqs.append(Request(f"lg-{len(reqs)}", t, p, d, predicted_decode=d,
+                            slo=LARGE_SLO))
+    return reqs
+
+
+def run_arm(model, n_instances, width, reqs, slo, admission=True,
+            policy_cls=DynaServePolicy, elastic=None):
+    cost = cost_for(model)
+    backend = SimBackend(cost, devices_per_instance=width)
+    if policy_cls is ElasticDynaServePolicy:
+        policy = policy_cls(cost, slo, elastic=elastic)
+    else:
+        policy = policy_cls(cost, slo)
+    sess = ServeSession(backend, policy, SessionConfig(
+        n_instances=n_instances, slo=slo, admission=admission))
+    return sess.run(reqs), sess, backend
+
+
+def main(csv=None, smoke=False):
+    csv = csv if csv is not None else Csv()
+    duration = 20.0 if smoke else 40.0
+    failures = []
+
+    # ---- fixed 4-device budget: pool width x shard width sweep ----
+    # the pool SLO is the class TBT: the local scheduler's prefill-only
+    # budget must clear the width-1 per-pass weight-read floor (~91 ms)
+    # or no width could prefill at all
+    reqs = large_model_trace(0.8, duration, seed=0)
+    arms = {"4x_tp1": (4, 1), "2x_tp2": (2, 2), "1x_tp4": (1, 4)}
+    served = {}
+    for arm, (n, w) in arms.items():
+        m, _, _ = run_arm(LARGE, n, w, reqs, LARGE_SLO.tbt)
+        frac = m.completed / max(1, m.offered)
+        served[arm] = frac
+        csv.add(f"sharded_scale.budget4.{arm}", m.goodput,
+                f"goodput_tok_per_s;completed={m.completed}/{m.offered};"
+                f"rejected={m.rejected};attain={m.token_attainment:.3f}")
+    # the large model under the tight SLO must load-shed at width 1 and
+    # become servable once the devices turn into TP shards
+    if not (served["4x_tp1"] < 0.7):
+        failures.append(
+            f"TP=1 pool served {served['4x_tp1']:.0%} of the large-model "
+            f"trace; expected load-shedding under the interactive SLO")
+    for arm in ("2x_tp2", "1x_tp4"):
+        if not (served[arm] >= 0.9):
+            failures.append(f"{arm} served only {served[arm]:.0%}; expected "
+                            f"the TP speedup to make the trace servable")
+    csv.add("sharded_scale.budget4.verdict",
+            0.0 if failures else 1.0,
+            f"tp1_served={served['4x_tp1']:.2f};"
+            f"tp2_served={served['2x_tp2']:.2f};"
+            f"tp4_served={served['1x_tp4']:.2f}")
+
+    # ---- guardrail: width-1 small model identical to the baseline ----
+    reqs_s = generate_trace("burstgpt", 2.0, duration, seed=1)
+    base, _, _ = run_arm(SMALL, 2, 1, reqs_s, 0.1)
+    cost = cost_for(SMALL)
+    sess = ServeSession(SimBackend(cost), DynaServePolicy(cost, 0.1),
+                        SessionConfig(n_instances=2, slo=0.1,
+                                      admission=True))
+    ref = sess.run(reqs_s)
+    csv.add("sharded_scale.width1_goodput", base.goodput,
+            f"baseline={ref.goodput:.1f};"
+            f"identical={base.goodput == ref.goodput}")
+    if base.goodput != ref.goodput or base.completed != ref.completed:
+        failures.append(
+            f"width-1 run diverged from the pre-sharding baseline: "
+            f"goodput {base.goodput:.2f} vs {ref.goodput:.2f}")
+
+    # ---- guardrail: the controller executes a width<->count trade ----
+    reqs_e = generate_trace("burstgpt", 6.0, duration, seed=0)
+    m, sess, backend = run_arm(
+        SMALL, 2, 1, reqs_e, 0.1, admission=False,
+        policy_cls=ElasticDynaServePolicy,
+        elastic=ElasticConfig(min_instances=1, max_instances=2,
+                              max_devices_per_instance=2,
+                              widen_cooldown=0.5))
+    widths = [backend.devices_for(i.iid) for i in sess.instances]
+    merged = sum(1 for w in widths if w > 1)
+    csv.add("sharded_scale.elastic_width_trades", float(merged),
+            f"widths={widths};completed={m.completed}/{m.offered}")
+    if merged < 1:
+        failures.append("elastic controller executed no width<->count "
+                        "trade on a loaded pool pinned at max_instances")
+
+    if failures:
+        # RuntimeError (not SystemExit) so benchmarks.run's per-module
+        # failure handling catches it and the rest of the suite runs
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorter traces (CI-sized)")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -78,6 +78,65 @@ class BatchCostModel:
             self.state_bytes = rec_layers * cfg.lru_dim * 4
         else:
             self.state_bytes = 0
+        self._init_tp()
+
+    # ------------------------------------------------------------------
+    # tensor-parallel scaling (devices_per_instance > 1)
+    # ------------------------------------------------------------------
+    def _init_tp(self) -> None:
+        """Per-component parallel speedups for a ``tp``-wide instance.
+
+        A uniform ``/ tp`` overstates the speedup twice over: dims the
+        width does not divide are *replicated* (GQA kv_heads, odd expert
+        counts) and do no less work per device, and the two per-layer
+        allreduces (attention-out, MLP-out) add link-bound time that
+        grows with width.  ``achieved_parallelism`` supplies the real
+        per-dim degrees; an Amdahl (harmonic) mean over the parameter
+        shares turns them into effective flops/bytes speedups; the
+        collective term is priced per batch token at ``link_bw``.
+
+        Everything reduces to exactly the legacy arithmetic at tp=1
+        (speedups 1.0, collective 0.0), keeping sim/engine decision
+        streams byte-identical for single-device pools.
+        """
+        cfg, tp = self.cfg, self.tp
+        if tp <= 1:
+            self.parallelism = None
+            self.coll_bytes_per_tok = 0.0
+            self.coll_s_per_tok = 0.0
+            self.flops_speedup = 1.0
+            self.bytes_speedup = 1.0
+            self.attn_tp = 1
+            self.kv_tp = 1
+            return
+        from repro.utils.sharding import achieved_parallelism
+        ap = achieved_parallelism(cfg, tp)
+        self.parallelism = ap
+        self.attn_tp = ap.heads
+        self.kv_tp = ap.kv_heads
+        mlp_tp = ap.experts if ap.experts > 1 else ap.ffn
+        dm, hd = cfg.d_model, cfg.hd
+        # parameter-share decomposition (matmul flops track param reads,
+        # so one set of shares serves both roofline sides)
+        attn_q = self.attn_layers * 2 * dm * cfg.n_heads * hd    # wq + wo
+        attn_kv = self.attn_layers * 2 * dm * cfg.n_kv_heads * hd
+
+        def amdahl(total: float) -> float:
+            sharded = attn_q + attn_kv
+            mlp = max(0.0, float(total) - sharded
+                      - cfg.vocab_size * dm)   # embed (+tied lm_head) rest
+            rest = max(0.0, float(total) - sharded - mlp)
+            t = (attn_q / ap.heads + attn_kv / ap.kv_heads
+                 + mlp / mlp_tp + rest)
+            return total / t if t > 0 else 1.0
+
+        self.flops_speedup = amdahl(self.n_active)
+        self.bytes_speedup = amdahl(self.n_params)
+        # ring allreduce after every attention-out and MLP-out projection:
+        # each moves 2*(tp-1)/tp * d_model activation bytes per token
+        self.coll_bytes_per_tok = (cfg.n_layers * 2 * 2.0 * (tp - 1) / tp
+                                   * dm * self.dtype_bytes)
+        self.coll_s_per_tok = self.coll_bytes_per_tok / self.hw.link_bw
 
     # ------------------------------------------------------------------
     def effective_ctx(self, ctx: int) -> int:
@@ -111,12 +170,52 @@ class BatchCostModel:
                 b += self.kv_bytes_per_tok * eff
         return b
 
+    def _flops_split(self, items: Sequence[WorkItem]) -> Tuple[float, float]:
+        """(dense matmul flops, attention-score flops) — the two scale
+        by different achieved TP degrees."""
+        dense = attn = 0.0
+        for it in items:
+            dense += 2.0 * self.n_active * it.tokens
+            if it.kind == "prefill":
+                eff = self.effective_ctx(it.ctx)
+                attn += self.attn_flops_coef * (it.tokens * eff
+                                                + it.tokens * it.tokens / 2.0)
+            else:
+                attn += self.attn_flops_coef * it.tokens * self.effective_ctx(it.ctx)
+        return dense, attn
+
+    def _kv_state_bytes(self, items: Sequence[WorkItem]) -> Tuple[float, float]:
+        kv = st = 0.0
+        for it in items:
+            if it.kind == "decode":
+                kv += self.kv_bytes_per_tok * self.effective_ctx(it.ctx)
+                st += self.state_bytes
+            else:
+                kv += self.kv_bytes_per_tok * self.effective_ctx(it.ctx + it.tokens)
+        return kv, st
+
+    def collective_time(self, items: Sequence[WorkItem]) -> float:
+        """Link-bound allreduce time for one forward over ``items``."""
+        if self.coll_s_per_tok == 0.0:
+            return 0.0
+        return self.coll_s_per_tok * sum(it.tokens for it in items)
+
     def latency(self, items: Sequence[WorkItem]) -> float:
         if not items:
             return 0.0
-        t_c = self.flops(items) / (self.hw.peak_flops * self.hw.mfu_cap * self.tp)
-        t_m = self.bytes_moved(items) / (self.hw.hbm_bw * self.hw.bw_eff * self.tp)
-        return max(t_c, t_m) + self.hw.batch_overhead
+        if self.tp <= 1:
+            t_c = self.flops(items) / (self.hw.peak_flops * self.hw.mfu_cap * self.tp)
+            t_m = self.bytes_moved(items) / (self.hw.hbm_bw * self.hw.bw_eff * self.tp)
+            return max(t_c, t_m) + self.hw.batch_overhead
+        dense_f, attn_f = self._flops_split(items)
+        t_c = (dense_f / self.flops_speedup + attn_f / self.attn_tp) \
+            / (self.hw.peak_flops * self.hw.mfu_cap)
+        kv_b, st_b = self._kv_state_bytes(items)
+        t_m = (self.weight_bytes / self.bytes_speedup
+               + kv_b / self.kv_tp + st_b) \
+            / (self.hw.hbm_bw * self.hw.bw_eff)
+        return max(t_c, t_m) + self.collective_time(items) \
+            + self.hw.batch_overhead
 
     # convenience for the schedulers ------------------------------------
     def decode_batch_latency(self, dnum: int, ctx: int) -> float:
@@ -137,6 +236,8 @@ class BatchCostModel:
         budget = slo - self.hw.batch_overhead
         if budget <= 0:
             return 0
+        if self.tp > 1:
+            return self._max_prefill_tokens_tp(budget, dnum, d_ctx, p_ctx)
         # memory side barely depends on plen; if decode alone busts the
         # budget there is no room for prefill at all
         base_mem = self.bytes_moved([WorkItem("decode", 1, d_ctx)] * dnum)
@@ -154,6 +255,35 @@ class BatchCostModel:
             m = flops_budget / bq
         else:
             m = (-bq + (bq * bq + 4 * a * flops_budget) ** 0.5) / (2 * a)
+        return max(0, int(m))
+
+    def _max_prefill_tokens_tp(self, budget: float, dnum: int, d_ctx: int,
+                               p_ctx: int) -> int:
+        """TP>1 budget inversion, in *time* units: the compute side scales
+        per component and every batch token pays the collective tax, so
+        the quadratic is solved on seconds instead of flops."""
+        decs = [WorkItem("decode", 1, d_ctx)] * dnum
+        F = self.hw.peak_flops * self.hw.mfu_cap
+        kv_b, st_b = self._kv_state_bytes(decs)
+        t_mem = (self.weight_bytes / self.bytes_speedup
+                 + kv_b / self.kv_tp + st_b) \
+            / (self.hw.hbm_bw * self.hw.bw_eff)
+        if t_mem > budget:
+            return 0
+        dense_f, attn_f = self._flops_split(decs)
+        t_dec = (dense_f / self.flops_speedup + attn_f / self.attn_tp) / F
+        avail = budget - t_dec - self.coll_s_per_tok * dnum
+        if avail <= 0:
+            return 0
+        # seconds(m) = a*m^2 + b*m with the collective folded into b
+        a = self.attn_flops_coef / (2.0 * self.attn_tp * F)
+        b = (2.0 * self.n_active / self.flops_speedup
+             + self.attn_flops_coef * self.effective_ctx(p_ctx) / self.attn_tp) \
+            / F + self.coll_s_per_tok
+        if a <= 0:
+            m = avail / b
+        else:
+            m = (-b + (b * b + 4 * a * avail) ** 0.5) / (2 * a)
         return max(0, int(m))
 
     # transfer ----------------------------------------------------------

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +61,15 @@ class ElasticConfig:
     # --- role drift ---
     bias_drift: float = 0.3            # per-check drift rate toward the target bias
     bias_span: float = 1.0             # |role bias| cap; 2**bias scales prefill budget
+    # --- width elasticity (devices per instance) ---
+    # >1 lets the controller trade pool width against shard width: when
+    # the pool is loaded but already at max_instances, two narrow
+    # members merge into one sharded (TP=2x) instance; when load
+    # subsides, a wide member splits back into narrow ones.  The
+    # default of 1 disables width trades entirely.
+    max_devices_per_instance: int = 1
+    widen_drain: Optional[float] = None  # load (s) triggering a merge; None = scale_up_drain
+    widen_cooldown: float = 3.0          # min seconds between width trades
 
 
 @dataclasses.dataclass
@@ -74,6 +83,7 @@ class InstanceStat:
     draining: bool
     role_bias: float
     mem_pressure: float = 0.0          # KV page-pool occupancy in [0, 1]
+    devices: int = 1                   # shard width (devices per instance)
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +114,26 @@ class SetRoleBias:
     bias: float
 
 
-PoolAction = Union[ScaleUp, DrainInstance, MigrateWork, SetRoleBias]
+@dataclasses.dataclass(frozen=True)
+class MergeInstances:
+    """Drain ``donors`` and attach one ``devices``-wide sharded instance
+    in their place (a pool-width -> shard-width trade)."""
+    donors: Tuple[int, ...]
+    devices: int
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitInstance:
+    """Drain the wide member ``iid`` and attach two ``devices``-wide
+    (usually 1-device) instances in its place."""
+    iid: int
+    devices: int
+    reason: str = ""
+
+
+PoolAction = Union[ScaleUp, DrainInstance, MigrateWork, SetRoleBias,
+                   MergeInstances, SplitInstance]
 
 
 class PoolController:
@@ -116,6 +145,7 @@ class PoolController:
         self._mix: Optional[float] = None       # EWMA prefill token fraction
         self._last_up = -math.inf
         self._last_down = -math.inf
+        self._last_width = -math.inf
         # the signal snapshot behind the most recent decide() call —
         # recorded alongside each pool action by the flight recorder so
         # scale events carry the evidence they were based on
@@ -199,6 +229,7 @@ class PoolController:
                              "max_pressure": max_pressure}
         pressured = max_pressure > cfg.scale_up_pressure
         scaled_up = False
+        scaled_down = False
         if (((self._load > cfg.scale_up_drain and has_backlog) or pressured)
                 and n_active < cfg.max_instances
                 and now - self._last_up >= cfg.scale_up_cooldown):
@@ -218,6 +249,7 @@ class PoolController:
             # requests read as "sparse" by count while drains are long
             victim = min(active, key=lambda s: (s.drain_time, s.n_queued))
             self._last_down = now
+            scaled_down = True
             why = (f"load {self._load:.2f}s < {cfg.scale_down_drain:.2f}s"
                    if low_load else
                    f"{total_queued} queued fit on {n_active - 1} instances")
@@ -225,6 +257,63 @@ class PoolController:
             draining_iids.add(victim.iid)
             active = [s for s in active if s.iid != victim.iid]
             n_active -= 1
+
+        # ---- width <-> count trades.  A pool pinned at max_instances
+        # with sustained backlog cannot ScaleUp; if width elasticity is
+        # enabled, merge the two least-loaded equal-width members into
+        # one sharded instance twice as wide (per-pass latency drops by
+        # roughly the TP speedup, so the *pool* regains headroom without
+        # new devices).  When load subsides and member slots are free
+        # again, split the least-loaded wide member back into narrow
+        # ones to recover placement parallelism. ----
+        if cfg.max_devices_per_instance > 1:
+            widen_at = (cfg.widen_drain if cfg.widen_drain is not None
+                        else cfg.scale_up_drain)
+            if (not scaled_up and not scaled_down
+                    and self._load > widen_at and has_backlog
+                    and n_active >= cfg.max_instances
+                    and now - self._last_width >= cfg.widen_cooldown):
+                by_width: dict = {}
+                for s in active:
+                    by_width.setdefault(s.devices, []).append(s)
+                for w in sorted(by_width):
+                    group = by_width[w]
+                    if len(group) < 2 or 2 * w > cfg.max_devices_per_instance:
+                        continue
+                    donors = sorted(group, key=lambda s:
+                                    (s.drain_time, s.n_queued))[:2]
+                    self._last_width = now
+                    actions.append(MergeInstances(
+                        (donors[0].iid, donors[1].iid), 2 * w,
+                        f"pool at {n_active}/{cfg.max_instances} members, "
+                        f"load {self._load:.2f}s > {widen_at:.2f}s: "
+                        f"merging two {w}-device members into one "
+                        f"{2 * w}-device instance"))
+                    # donors drain now; the evacuation loop below moves
+                    # their queued work onto surviving members
+                    for d in donors:
+                        draining_iids.add(d.iid)
+                    active = [s for s in active
+                              if s.iid not in (donors[0].iid, donors[1].iid)]
+                    n_active -= 2
+                    break
+            elif (not scaled_up and not scaled_down
+                    and low_load and not pressured
+                    and n_active < cfg.max_instances
+                    and now - self._last_width >= cfg.widen_cooldown):
+                wide = [s for s in active if s.devices > 1]
+                if wide:
+                    victim = min(wide, key=lambda s:
+                                 (s.drain_time, s.n_queued))
+                    self._last_width = now
+                    actions.append(SplitInstance(
+                        victim.iid, max(1, victim.devices // 2),
+                        f"load {self._load:.2f}s < "
+                        f"{cfg.scale_down_drain:.2f}s: splitting the "
+                        f"{victim.devices}-device member into two"))
+                    draining_iids.add(victim.iid)
+                    active = [s for s in active if s.iid != victim.iid]
+                    n_active -= 1
 
         # ---- migrate work off draining members (including the one just
         # picked above) so they can retire.  Skipped on a scale-up round:

@@ -38,6 +38,11 @@ class InstanceView:
     draining: bool = False
     role_bias: float = 0.0
     cached_prefix: int = 0
+    # cost model matching the instance's shard width (None = the
+    # scheduler-wide model): probes of a TP=n member price its virtual
+    # batches with TP=n latencies, so a wide instance correctly looks
+    # faster to the binary search than a 1-device one
+    cost: Optional[BatchCostModel] = None
 
 
 @dataclasses.dataclass
@@ -115,7 +120,9 @@ class GlobalScheduler:
         if len(cands) == 1:
             self._last_candidates = [(instances[cands[0]].iid, 0.0)]
             return cands[0], cands[0]
-        dt = {i: self.predictor.drain_time(instances[i].queue) for i in cands}
+        dt = {i: self.predictor.drain_time(instances[i].queue,
+                                           cost=instances[i].cost)
+              for i in cands}
         self._last_candidates = [(instances[i].iid, dt[i]) for i in cands]
         # bias weight relative to typical drain so it reorders only
         # near-ties; the floor keeps it meaningful on an idle pool
@@ -149,6 +156,7 @@ class GlobalScheduler:
         # cached-prefix lengths on the chosen alpha/beta targets: every
         # probe below scores *effective* prefill (prompt minus hit)
         ca, cb = instances[ia].cached_prefix, instances[ib].cached_prefix
+        cost_a, cost_b = instances[ia].cost, instances[ib].cost
         same_instance = ia == ib
         # Placement carries instance *ids*, not view indices, so callers
         # may pass a sparse/filtered view of an elastic pool.
@@ -159,7 +167,7 @@ class GlobalScheduler:
         if same_instance:
             whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
             t1 = self.predictor.completion_time(
-                qa, self._work_of(whole, cached=ca), slo=slo)
+                qa, self._work_of(whole, cached=ca), slo=slo, cost=cost_a)
             return Placement(whole, None, ia, None, 1.0, t1, 0.0, 0,
                              time.perf_counter() - t0,
                              trials=[(1.0, t1, 0.0)],
@@ -176,10 +184,10 @@ class GlobalScheduler:
             alpha, beta = split_request(r_eff, phi)
             t1 = self.predictor.completion_time(
                 qa, self._work_of(alpha, cached=ca) if alpha else None,
-                slo=slo)
+                slo=slo, cost=cost_a)
             t2 = self.predictor.completion_time(
                 qb, self._work_of(beta, cached=cb) if beta else None,
-                slo=slo)
+                slo=slo, cost=cost_b)
             return Placement(alpha, beta, ia if alpha else None,
                              ib if beta else None, phi, t1, t2, 0,
                              time.perf_counter() - t0,
@@ -196,10 +204,10 @@ class GlobalScheduler:
             alpha, beta = split_request(r_eff, phi)
             t1 = self.predictor.completion_time(
                 qa, self._work_of(alpha, cached=ca) if alpha else None,
-                slo=slo)
+                slo=slo, cost=cost_a)
             t2 = self.predictor.completion_time(
                 qb, self._work_of(beta, cached=cb) if beta else None,
-                slo=slo)
+                slo=slo, cost=cost_b)
             trials.append((phi, t1, t2))
             gap = abs(t1 - t2)
             if best is None or gap < best[0]:
@@ -220,7 +228,7 @@ class GlobalScheduler:
         # clearly beats running the request whole on the idler instance.
         whole = MicroRequest(r_eff, "alpha", 0, r_eff.L)
         t_whole = self.predictor.completion_time(
-            qa, self._work_of(whole, cached=ca), slo=slo)
+            qa, self._work_of(whole, cached=ca), slo=slo, cost=cost_a)
         trials.append((1.0, t_whole, 0.0))
         if t_whole <= max(t1, t2) * (1.0 + self.split_gain_threshold):
             return Placement(whole, None, ia, None, 1.0, t_whole, 0.0,

@@ -38,14 +38,18 @@ class ExecutionPredictor:
 
     # ------------------------------------------------------------------
     def drain_time(self, queue: Sequence[QueuedWork], now: float = 0.0,
-                   slo: Optional[float] = None) -> float:
+                   slo: Optional[float] = None,
+                   cost: Optional[BatchCostModel] = None) -> float:
         """Predicted time until the instance finishes all queued work.
 
         ``slo`` overrides the per-pass TBT budget used to size virtual
         batches (the arriving request's SLO class, when it has one).
+        ``cost`` overrides the cost model — probes of a sharded (TP>1)
+        instance price its batches with that instance's model.
         """
         if not queue:
             return 0.0
+        cost = cost if cost is not None else self.cost
         # Per-pass prefill budget under the local scheduler's SLO control.
         # dnum varies over the drain; use the average active decode count
         # to pick a representative budget (the local scheduler re-tunes it
@@ -56,8 +60,8 @@ class ExecutionPredictor:
         # decode start pass of each request (FCFS prefill drain at M/pass)
         n = len(queue)
         budget_slo = slo if slo is not None else self.slo
-        M = max(1, self.cost.max_prefill_tokens(budget_slo, min(n, 8),
-                                                int(avg_ctx)))
+        M = max(1, cost.max_prefill_tokens(budget_slo, min(n, 8),
+                                           int(avg_ctx)))
         starts: List[int] = []
         cum = 0
         for q in queue:
@@ -77,7 +81,7 @@ class ExecutionPredictor:
             mid = (lo + hi) / 2.0
             ctx = avg_ctx + mid          # decode ctx grows ~1/pass
             plen = M if lo < prefill_passes else 0
-            lat = self.cost.mixed_batch_latency(plen, int(avg_ctx), dnum, int(ctx))
+            lat = cost.mixed_batch_latency(plen, int(avg_ctx), dnum, int(ctx))
             t += n_pass * lat
         # trailing epoch: if all passes were consumed by events, done;
         # otherwise everything ended at the last event.
@@ -86,8 +90,9 @@ class ExecutionPredictor:
     def completion_time(self, queue: Sequence[QueuedWork],
                         new: Optional[QueuedWork] = None,
                         now: float = 0.0,
-                        slo: Optional[float] = None) -> float:
+                        slo: Optional[float] = None,
+                        cost: Optional[BatchCostModel] = None) -> float:
         q = list(queue)
         if new is not None:
             q.append(new)
-        return self.drain_time(q, now, slo=slo)
+        return self.drain_time(q, now, slo=slo, cost=cost)

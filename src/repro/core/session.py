@@ -281,6 +281,24 @@ class Backend:
     def retire(self, iid: int) -> None:
         """Tear down a drained instance's substrate."""
 
+    # ---- sharded (multi-device) instances ----
+    def devices_for(self, iid: int) -> int:
+        """Shard width (device count) of the instance; 1 = unsharded."""
+        return 1
+
+    def set_devices(self, iid: int, n: int) -> None:
+        """Pin an instance's shard width before (re-)spawning it — the
+        elastic controller's width↔count trades go through here."""
+        if n > 1:
+            raise NotImplementedError(
+                f"{type(self).__name__} does not support sharded "
+                f"instances")
+
+    def cost_for(self, iid: int) -> BatchCostModel:
+        """Cost model matching the instance's shard width (schedulers
+        price a TP=n instance with TP=n latencies)."""
+        return self.cost
+
     def register(self, req: Request, prompt=None) -> None:
         """Make the request's inputs available (prompt tokens etc.)."""
 
@@ -684,7 +702,8 @@ class ServeSession:
         for i in range(self.cfg.n_instances):
             backend.spawn(i)
             self.instances.append(InstanceState(
-                i, policy.make_local_scheduler(i, self.cost, self.cfg.slo),
+                i, policy.make_local_scheduler(i, backend.cost_for(i),
+                                               self.cfg.slo),
                 policy.role_of(i, self.cfg.n_instances)))
         self.req_states: Dict[str, ReqState] = {}
         self.handles: Dict[str, ServeHandle] = {}
@@ -972,13 +991,22 @@ class ServeSession:
         """Members still holding or receiving work (not yet retired)."""
         return [i for i in self.instances if not i.retired]
 
-    def add_instance(self) -> InstanceState:
+    def add_instance(self, devices: Optional[int] = None) -> InstanceState:
         """Scale up: cancel an in-flight drain (warmest), revive a
         retired member (profile table stays warm), or append a fresh
         one — in that order, so the pool never exceeds its cap while a
-        drain is still completing."""
+        drain is still completing.
+
+        ``devices`` asks for a *sharded* member of that width: undrain
+        only considers members already at the width (their engine is
+        live), while a retired member's substrate is gone and may be
+        revived at a new width (the elastic width↔count trade); its
+        local scheduler is rebuilt over the width's cost model."""
         inst = next((i for i in self.instances
-                     if i.draining and not i.retired), None)
+                     if i.draining and not i.retired
+                     and (devices is None
+                          or self.backend.devices_for(i.iid) == devices)),
+                    None)
         if inst is not None:
             inst.draining = False
             label = "undrain"
@@ -988,23 +1016,31 @@ class ServeSession:
                 inst.retired = False
                 inst.draining = False
                 inst.segments.append([self.now, None])
+                if devices is not None and \
+                        devices != self.backend.devices_for(inst.iid):
+                    self.backend.set_devices(inst.iid, devices)
+                    inst.scheduler = self.policy.make_local_scheduler(
+                        inst.iid, self.backend.cost_for(inst.iid),
+                        self.cfg.slo)
                 self.backend.spawn(inst.iid)
                 label = "revive"
             else:
                 iid = len(self.instances)
+                if devices is not None:
+                    self.backend.set_devices(iid, devices)
                 self.backend.spawn(iid)
                 inst = InstanceState(
                     iid,
-                    self.policy.make_local_scheduler(iid, self.cost,
-                                                     self.cfg.slo),
+                    self.policy.make_local_scheduler(
+                        iid, self.backend.cost_for(iid), self.cfg.slo),
                     self.policy.role_of(iid, iid + 1), spawned_at=self.now)
                 self.instances.append(inst)
                 label = "attach"
         self.pool_events.append((self.now, f"{label} {inst.iid}"))
         if self._dec:
-            self.record_decision("scale", {"iid": inst.iid,
-                                           "action": label,
-                                           "direction": "up"})
+            self.record_decision("scale", {
+                "iid": inst.iid, "action": label, "direction": "up",
+                "devices": self.backend.devices_for(inst.iid)})
         self.n_instances_peak = max(self.n_instances_peak,
                                     len(self.active_instances()))
         return inst
@@ -1189,13 +1225,14 @@ class ServeSession:
         slo = r.slo.tbt if r.slo is not None else self.cfg.slo
         best = float("inf")
         for inst in act:
+            cost = self.backend.cost_for(inst.iid)
             queued_pf = sum(m.prefill_remaining for m in inst.prefill_q)
             dnum = len(inst.decode_q)
             avg_ctx = int(sum(m.pos for m in inst.decode_q) / dnum) \
                 if dnum else 0
-            M = max(1, self.cost.max_prefill_tokens(slo, min(dnum, 8),
-                                                    avg_ctx))
-            per_pass = self.cost.mixed_batch_latency(M, 0, dnum, avg_ctx)
+            M = max(1, cost.max_prefill_tokens(slo, min(dnum, 8),
+                                               avg_ctx))
+            per_pass = cost.mixed_batch_latency(M, 0, dnum, avg_ctx)
             # a cached prefix collapses the newcomer's effective prefill
             p_eff = max(0, r.P - self.backend.cached_prefix(inst.iid, r))
             n_pass = math.ceil((queued_pf + p_eff) / M)

@@ -141,7 +141,8 @@ class EngineBackend(Backend):
                  n_pages: Optional[int] = None,
                  max_chunk: int = DEFAULT_MAX_CHUNK,
                  prefix_cache: bool = False,
-                 kv_precision="bf16"):
+                 kv_precision="bf16",
+                 devices_per_instance=1):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -168,6 +169,12 @@ class EngineBackend(Backend):
         # dict/sequence mapping instance id -> format for heterogeneous
         # pools (e.g. a bf16 interactive pool next to an fp8 batch pool)
         self.kv_precision = kv_precision
+        # per-instance shard width: a single int for a homogeneous pool,
+        # or a dict/sequence mapping instance id -> device count for a
+        # mixed pool (e.g. a wide TP=4 instance next to 1-device ones)
+        self.devices_per_instance = devices_per_instance
+        self.hw = hw
+        self._costs: Dict[int, BatchCostModel] = {1: self.cost}
         self.handoff_bytes_saved = 0
         self.handoff_saved_by_iid: Dict[int, int] = {}
         self._rng = np.random.default_rng(seed)
@@ -179,6 +186,55 @@ class EngineBackend(Backend):
         elif isinstance(spec, (list, tuple)):
             spec = spec[iid % len(spec)]
         return get_precision(spec)
+
+    # ---------------- sharded instances ----------------
+    def devices_for(self, iid: int) -> int:
+        """Shard width (device count) of instance ``iid`` under the
+        configured spec (int | dict | sequence, like kv_precision)."""
+        spec = self.devices_per_instance
+        if isinstance(spec, dict):
+            spec = spec.get(iid, spec.get("default", 1))
+        elif isinstance(spec, (list, tuple)):
+            spec = spec[iid % len(spec)]
+        return max(1, int(spec))
+
+    def set_devices(self, iid: int, n: int) -> None:
+        """Pin instance ``iid``'s shard width (the elastic controller's
+        width↔count trades call this before re-spawning)."""
+        spec = self.devices_per_instance
+        if not isinstance(spec, dict):
+            if isinstance(spec, (list, tuple)):
+                spec = {i: spec[i % len(spec)] for i in range(len(spec))}
+            else:
+                spec = {"default": int(spec)}
+            self.devices_per_instance = spec
+        spec[iid] = max(1, int(n))
+
+    def cost_for(self, iid: int) -> BatchCostModel:
+        """Cost model matching instance ``iid``'s shard width — the
+        schedulers' probes and budgets price a TP=2 instance with TP=2
+        latencies (one model per width, cached)."""
+        n = self.devices_for(iid)
+        if n not in self._costs:
+            self._costs[n] = BatchCostModel(self.cfg, self.hw, tp_degree=n)
+        return self._costs[n]
+
+    def _instance_devices(self, iid: int):
+        """Deterministic round-robin sub-mesh for instance ``iid`` (on
+        forced-host CPU the devices are virtual, so overlap is fine —
+        assignment only has to be reproducible)."""
+        import jax
+        n = self.devices_for(iid)
+        if n <= 1:
+            return None
+        all_devs = jax.devices()
+        if n > len(all_devs):
+            raise ValueError(
+                f"instance {iid} wants {n} devices but only "
+                f"{len(all_devs)} are visible; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n} (CPU) or "
+                f"run on a {n}-device host")
+        return [all_devs[(iid * n + j) % len(all_devs)] for j in range(n)]
 
     def _credit_saved(self, iid: int, nbytes: int) -> None:
         if nbytes <= 0:
@@ -195,7 +251,8 @@ class EngineBackend(Backend):
                 kv_mode=self.kv_mode,
                 page_size=self.page_size or 8, n_pages=self.n_pages,
                 max_chunk=self.max_chunk, prefix_cache=self.prefix_cache,
-                kv_precision=self._precision_for(iid).name)
+                kv_precision=self._precision_for(iid).name,
+                devices=self._instance_devices(iid))
             # the engine owns the auto-mode rule; the backend's page
             # bookkeeping (register/admission/total_pages) must agree
             assert eng.paged == self.paged, \
@@ -238,6 +295,10 @@ class EngineBackend(Backend):
             "kv_precision": (self.kv_precision
                              if isinstance(self.kv_precision, str)
                              else "mixed"),
+            "devices_per_instance": (self.devices_per_instance
+                                     if isinstance(self.devices_per_instance,
+                                                   int)
+                                     else "mixed"),
         }
 
     def gauges(self, iid: int) -> Dict[str, float]:
@@ -251,6 +312,7 @@ class EngineBackend(Backend):
             "slots_free": float(eng.n_free),
             "slots_total": float(self.n_slots),
             "kv_bytes_moved": float(self.kv_bytes_moved),
+            "devices": float(eng.tp),
         }
         if self.paged:
             out["kv_pages_free"] = float(eng.free_pages)

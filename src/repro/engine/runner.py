@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map_compat
 from repro.core.precision import get_precision
 from repro.engine.block_allocator import (
     BlockAllocator, CapacityError, OutOfPages, pages_for,
@@ -29,6 +30,8 @@ from repro.models.config import ModelConfig
 from repro.models.model import (
     forward, init_cache, init_paged_cache, supports_paged_kv,
 )
+from repro.models.tp import tp_context
+from repro.utils.sharding import tp_cache_specs, tp_param_specs
 
 DEFAULT_MAX_CHUNK = 512
 
@@ -94,6 +97,14 @@ class InstanceEngine:
     * ``"dense"`` — the legacy (n_slots, max_len) slot cache; required
       for ring-buffer / recurrent / enc-dec architectures.
     * ``"auto"`` (default) — paged when the architecture supports it.
+
+    ``devices`` makes the instance *sharded*: a list of n devices forms a
+    1-D ``("model",)`` sub-mesh and every step runs as one jitted
+    ``shard_map`` over it — tensor-parallel attention/MLP (heads / ffn
+    sharded, psum at the output projections) and expert-parallel MoE
+    (each shard owns a contiguous expert slice).  KV pages shard over
+    kv_heads; ``export_state`` gathers to the portable single-device
+    piece format so handoffs cross shard widths transparently.
     """
 
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 8,
@@ -102,7 +113,8 @@ class InstanceEngine:
                  n_pages: Optional[int] = None,
                  max_chunk: int = DEFAULT_MAX_CHUNK,
                  prefix_cache: bool = False,
-                 kv_precision: str = "bf16"):
+                 kv_precision: str = "bf16",
+                 devices: Optional[Sequence] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -111,6 +123,10 @@ class InstanceEngine:
         self.max_chunk = max_chunk
         self.buckets = bucket_ladder(max_chunk)
         self.kv_precision = get_precision(kv_precision)
+        self.devices = list(devices) if devices else None
+        self.tp = len(self.devices) if self.devices else 1
+        if self.tp > 1:
+            self._validate_tp()
         if kv_mode not in ("auto", "paged", "dense"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
         if kv_mode == "paged" and not supports_paged_kv(cfg):
@@ -150,6 +166,12 @@ class InstanceEngine:
         if prefix_cache:
             self.prefix = PrefixCache(self.page_size)
             self.allocator.evictor = self._evict_cached_page
+        # sharded instance: place params and the KV pool on the sub-mesh
+        self.mesh = None
+        self._param_specs = None
+        self._cache_specs = None
+        if self.tp > 1:
+            self._shard_instance()
         self.free_slots = list(range(n_slots))
         self.slot_owner: Dict[int, str] = {}
         self._step_fns: Dict[tuple, callable] = {}
@@ -157,6 +179,57 @@ class InstanceEngine:
         self.iterations = 0
         self.tokens_processed = 0
         self.prefix_hit_tokens = 0
+
+    # ---------------- tensor/expert parallelism ----------------
+    def _validate_tp(self) -> None:
+        """A sharded instance requires every shardable dim to divide the
+        mesh: a q-sharded / kv-replicated GQA split would break the
+        contiguous-group attention reshape, and partially-sharded MLPs
+        buy nothing.  Archs with recurrent / cross / frontend state keep
+        per-slot host scatter paths that are not shard-aware."""
+        cfg, tp = self.cfg, self.tp
+        bad: List[str] = []
+        if not all(k in ("attn", "local_attn") for k in cfg.layer_pattern):
+            bad.append(f"layer pattern {cfg.layer_pattern!r} "
+                       f"(attention-only archs shard)")
+        if cfg.tail_kinds or cfg.cross_attention or \
+                cfg.arch_type in ("vlm", "audio"):
+            bad.append("tail/cross/frontend blocks do not shard")
+        if cfg.n_heads % tp:
+            bad.append(f"n_heads={cfg.n_heads} % {tp} != 0")
+        if cfg.n_kv_heads % tp:
+            bad.append(f"n_kv_heads={cfg.n_kv_heads} % {tp} != 0")
+        if cfg.moe_experts:
+            if cfg.moe_experts % tp:
+                bad.append(f"moe_experts={cfg.moe_experts} % {tp} != 0")
+        elif cfg.mlp != "none" and cfg.d_ff % tp:
+            bad.append(f"d_ff={cfg.d_ff} % {tp} != 0")
+        if self.kv_precision.quantized:
+            bad.append(f"kv_precision={self.kv_precision.name!r} "
+                       f"(quantized scale planes have no head dim to "
+                       f"shard)")
+        if bad:
+            raise ValueError(
+                f"{cfg.name} cannot run as a {tp}-device sharded "
+                f"instance: " + "; ".join(bad))
+
+    def _shard_instance(self) -> None:
+        """Build the ("model",) sub-mesh and place params + cache with
+        Megatron-style NamedShardings; the jitted shard_map steps then
+        consume them without resharding."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        self.mesh = Mesh(np.asarray(self.devices), ("model",))
+
+        def put(tree, specs):
+            shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(self.mesh, s), specs,
+                is_leaf=lambda s: isinstance(s, P))
+            return jax.device_put(tree, shardings)
+
+        self._param_specs = tp_param_specs(self.cfg, self.params)
+        self._cache_specs = tp_cache_specs(self.cache)
+        self.params = put(self.params, self._param_specs)
+        self.cache = put(self.cache, self._cache_specs)
 
     # ---------------- slot management ----------------
     def alloc(self, req_id: str) -> int:
@@ -271,25 +344,44 @@ class InstanceEngine:
         cfg, wo, page = self.cfg, self.window_override, self.page_size
 
         if n_pp:
-            @jax.jit
-            def step(params, cache, tokens, pos_offset, n_valid, active,
-                     tables):
+            def step_body(params, cache, tokens, pos_offset, n_valid,
+                          active, tables):
                 logits, new_cache, _ = forward(
                     params, cfg, tokens, cache=cache, pos_offset=pos_offset,
                     active=active, n_valid=n_valid, last_only=True,
                     block_tables=tables, page_size=page)
                 return logits[:, 0], new_cache
         else:
-            @jax.jit
-            def step(params, cache, tokens, pos_offset, n_valid, active):
+            def step_body(params, cache, tokens, pos_offset, n_valid,
+                          active):
                 logits, new_cache, _ = forward(
                     params, cfg, tokens, cache=cache, pos_offset=pos_offset,
                     active=active, n_valid=n_valid, last_only=True,
                     window_override=wo)
                 return logits[:, 0], new_cache
 
+        if self.tp > 1:
+            step = jax.jit(self._shard_step(step_body, n_batch_args=5 if n_pp else 4))
+        else:
+            step = jax.jit(step_body)
         self._step_fns[key] = step
         return step
+
+    def _shard_step(self, step_body, n_batch_args: int):
+        """Wrap a step body in ``shard_map`` over the instance sub-mesh.
+        Params/cache enter per their Megatron specs; batch operands and
+        logits are replicated.  ``tp_context`` marks the trace so the
+        model's output projections psum over the axis."""
+        from jax.sharding import PartitionSpec as P
+
+        def body(params, cache, *batch):
+            with tp_context("model"):
+                return step_body(params, cache, *batch)
+
+        in_specs = (self._param_specs, self._cache_specs) + \
+            (P(),) * n_batch_args
+        return shard_map_compat(body, self.mesh, in_specs,
+                                (P(), self._cache_specs))
 
     # ---------------- execution ----------------
     def run_batch(self, items: Sequence[BatchItem]) -> Dict[int, np.ndarray]:

@@ -17,15 +17,20 @@ SLO-attaining tokens per second measured at the API.
 from __future__ import annotations
 
 import argparse
-from typing import Dict, List, Optional
+import os
+import sys
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
+# NOTE: keep this module's eager imports jax-free — sharded engine
+# instances must force the host XLA device count before the first jax
+# import, so anything that transitively imports jax (the simulator,
+# the engine backend) is imported lazily inside the serve_* functions.
 from repro.core.costmodel import A100, BatchCostModel
 from repro.core.request import Request, SLO_CLASSES
 from repro.core.session import ServeSession, SessionConfig, SessionMetrics
 from repro.data.workloads import generate_trace, pick_slo
-from repro.sim.simulator import SimBackend
 
 
 def parse_slo_mix(text: Optional[str]) -> Optional[Dict[str, float]]:
@@ -40,6 +45,35 @@ def parse_slo_mix(text: Optional[str]) -> Optional[Dict[str, float]]:
                              f"one of {sorted(SLO_CLASSES)}")
         mix[name] = float(w or 1.0)
     return mix
+
+
+def parse_devices(text) -> Union[int, List[int]]:
+    """``2`` -> uniform shard width; ``1,2,2`` -> per-instance widths
+    (instance iid takes ``widths[iid % len(widths)]``)."""
+    if text is None:
+        return 1
+    s = str(text).strip()
+    if "," in s:
+        widths = [max(1, int(p)) for p in s.split(",") if p.strip()]
+        return widths if widths else 1
+    return max(1, int(s or 1))
+
+
+def _max_width(dpi: Union[int, List[int]]) -> int:
+    return max(dpi) if isinstance(dpi, list) else dpi
+
+
+def _ensure_host_devices(n: int) -> None:
+    """Sharded engine instances need >= n XLA devices; on a CPU-only
+    host that means forcing the host platform device count *before*
+    jax is imported (afterwards the flag is inert and the backend
+    raises with the same hint)."""
+    if n <= 1 or "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
 def mini_trace(n: int, qps: float, seed: int,
@@ -127,6 +161,8 @@ def _finish_recorder(rec, args) -> None:
 
 
 def serve_engine(args) -> SessionMetrics:
+    dpi = parse_devices(args.devices_per_instance)
+    _ensure_host_devices(args.instances * _max_width(dpi))
     import jax
     from repro.configs import get_smoke_config
     from repro.engine.backend import EngineBackend
@@ -152,7 +188,8 @@ def serve_engine(args) -> SessionMetrics:
     backend = EngineBackend(cfg, params, n_slots=max(8, 2 * args.requests),
                             max_len=args.prompt_len + args.max_new + 32,
                             prefix_cache=args.prefix_cache,
-                            kv_precision=kvp or "bf16")
+                            kv_precision=kvp or "bf16",
+                            devices_per_instance=dpi)
     policy = DynaServePolicy(backend.cost, args.slo)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
@@ -175,10 +212,12 @@ def serve_sim(args) -> SessionMetrics:
     from repro.configs import get_config
     from repro.core.elastic import ElasticConfig
     from repro.sim.policies import DynaServePolicy, ElasticDynaServePolicy
+    from repro.sim.simulator import SimBackend
 
     from repro.data.workloads import SHARED_PREFIX_TRACES, shared_prefix_trace
 
     cost = BatchCostModel(get_config(args.arch), A100)
+    dpi = parse_devices(args.devices_per_instance)
     mix = parse_slo_mix(args.slo_mix)
     if args.workload in SHARED_PREFIX_TRACES:
         reqs = shared_prefix_trace(args.workload, args.qps, args.duration,
@@ -190,7 +229,8 @@ def serve_sim(args) -> SessionMetrics:
         policy = ElasticDynaServePolicy(
             cost, args.slo,
             elastic=ElasticConfig(min_instances=max(1, args.instances // 2),
-                                  max_instances=2 * args.instances))
+                                  max_instances=2 * args.instances,
+                                  max_devices_per_instance=_max_width(dpi)))
     else:
         policy = DynaServePolicy(cost, args.slo)
     from repro.core.precision import PrecisionPolicy
@@ -201,9 +241,10 @@ def serve_sim(args) -> SessionMetrics:
     if args.prefix_cache:
         backend = SimBackend(cost, page_size=args.page_size,
                              pages_per_instance=args.pages_per_instance,
-                             prefix_cache=True, **prec_kw)
+                             prefix_cache=True,
+                             devices_per_instance=dpi, **prec_kw)
     else:
-        backend = SimBackend(cost, **prec_kw)
+        backend = SimBackend(cost, devices_per_instance=dpi, **prec_kw)
     session = ServeSession(backend, policy, SessionConfig(
         n_instances=args.instances, slo=args.slo,
         admission=args.admission,
@@ -220,6 +261,10 @@ def serve_sim(args) -> SessionMetrics:
 
 def serve_http(args) -> None:
     """Long-lived front door: OpenAI-compatible HTTP + /metrics."""
+    if (args.backend or "sim") == "engine":
+        _ensure_host_devices(
+            args.instances * _max_width(parse_devices(
+                args.devices_per_instance)))
     from repro.serving.http import ServerConfig, ServingServer
 
     cfg = ServerConfig(
@@ -229,6 +274,7 @@ def serve_http(args) -> None:
         admission=args.admission, overlap=args.overlap or None,
         prefix_cache=args.prefix_cache, page_size=args.page_size,
         pages_per_instance=args.pages_per_instance,
+        devices_per_instance=parse_devices(args.devices_per_instance),
         trace_path=args.trace_log,
         decision_log=args.decision_log)
     server = ServingServer(cfg)
@@ -303,6 +349,15 @@ def main(argv=None):
                          "an explicit 'class=fmt,...' map.  Engine "
                          "pools take a uniform format; the sim models "
                          "SLO-mixed pools")
+    ap.add_argument("--devices-per-instance", default="1",
+                    help="shard width of each instance: a uniform int "
+                         "(2 = every instance is a TP=2 shard_map over "
+                         "2 devices) or a comma list like 1,2,2 "
+                         "(instance iid takes widths[iid %% len]).  "
+                         "Engine pools need that many XLA devices (on "
+                         "CPU hosts the launcher forces "
+                         "--xla_force_host_platform_device_count); the "
+                         "sim prices the same widths in its cost model")
     ap.add_argument("--seed", type=int, default=0)
     # engine-backend knobs
     ap.add_argument("--requests", type=int, default=8)

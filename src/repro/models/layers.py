@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+from repro.models.tp import tp_axis
 
 
 # --------------------------------------------------------------------------
@@ -135,6 +136,18 @@ def init_mlp(pf: ParamFactory, cfg: ModelConfig):
     raise ValueError(cfg.mlp)
 
 
+def _mlp_out(h, p, cfg: ModelConfig):
+    """Down-projection; inside a tensor-parallel trace a *sharded* ffn
+    dim yields partial sums that must psum so the residual add sees the
+    replicated value.  A dim the mesh axis did not divide is replicated
+    (``p["wo"]`` is full-width) and must not be summed."""
+    y = h @ p["wo"]
+    ax = tp_axis()
+    if ax is not None and p["wo"].shape[0] != cfg.d_ff:
+        y = jax.lax.psum(y, ax)
+    return y
+
+
 def mlp_fwd(p, x, cfg: ModelConfig):
     """Returns (y, aux_loss). aux_loss is the MoE load-balance term (0 for
     dense MLPs)."""
@@ -142,15 +155,15 @@ def mlp_fwd(p, x, cfg: ModelConfig):
         return moe_fwd(p, x, cfg)
     if cfg.mlp == "swiglu":
         h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
-        return h @ p["wo"], jnp.float32(0.0)
+        return _mlp_out(h, p, cfg), jnp.float32(0.0)
     if cfg.mlp == "geglu":
         h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
-        return h @ p["wo"], jnp.float32(0.0)
+        return _mlp_out(h, p, cfg), jnp.float32(0.0)
     if cfg.mlp == "squared_relu":
         h = jnp.square(jax.nn.relu(x @ p["wi"]))
-        return h @ p["wo"], jnp.float32(0.0)
+        return _mlp_out(h, p, cfg), jnp.float32(0.0)
     if cfg.mlp == "gelu":
-        return jax.nn.gelu(x @ p["wi"]) @ p["wo"], jnp.float32(0.0)
+        return _mlp_out(jax.nn.gelu(x @ p["wi"]), p, cfg), jnp.float32(0.0)
     raise ValueError(cfg.mlp)
 
 
@@ -204,21 +217,38 @@ def moe_fwd(p, x, cfg: ModelConfig, capacity_factor: Optional[float] = None):
     keep = pos_in_e < cap
     gate_w = gate_w * keep.astype(gate_w.dtype)
 
-    # dispatch: (E, cap, dm)
-    buf = jnp.zeros((E, cap, dm), x.dtype)
+    # Expert parallelism: inside a tensor-parallel trace each shard owns
+    # the contiguous expert slice [e_off, e_off + E_local).  The router,
+    # top-k and capacity ranking above are computed from replicated
+    # activations, so every shard agrees on the global dispatch; the
+    # shard then keeps only its own experts' slots and the combine psum
+    # sums each token's K contributions exactly once across shards.
+    E_local = p["wi"].shape[0]
+    ax = tp_axis() if p["wi"].shape[0] != E else None
+    e_off = 0
+    if ax is not None:
+        e_off = jax.lax.axis_index(ax) * E_local
+        local = (gate_idx >= e_off) & (gate_idx < e_off + E_local)
+        keep = keep & local
+        gate_w = gate_w * local.astype(gate_w.dtype)
+
+    # dispatch: (E_local, cap, dm)
+    buf = jnp.zeros((E_local, cap, dm), x.dtype)
     tok_ids = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K))
-    e_idx = jnp.where(keep, gate_idx, E - 1)
+    e_idx = jnp.where(keep, gate_idx - e_off, E_local - 1)
     c_idx = jnp.clip(pos_in_e, 0, cap - 1)
     buf = buf.at[e_idx, c_idx].add(
         xf[tok_ids] * keep[..., None].astype(x.dtype), mode="drop")
 
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
         jnp.einsum("ecd,edf->ecf", buf, p["wi"])
-    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])           # (E, cap, dm)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])           # (E_local, cap, dm)
 
     # combine
     gathered = out_e[e_idx, c_idx]                            # (S, K, dm)
     yf = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=1)
+    if ax is not None:
+        yf = jax.lax.psum(yf, ax)
     aux = moe_load_balance_loss(probs, gate_idx, E, K)
     return yf.reshape(B, T, dm), aux
 

@@ -27,6 +27,7 @@ from repro.models.config import ModelConfig
 from repro.models.layers import (
     ParamFactory, apply_rope, init_norm, norm_fwd, rms_head_norm, rope_tables,
 )
+from repro.models.tp import tp_axis
 
 NEG_INF = -1e30
 
@@ -56,7 +57,12 @@ def init_attention(pf: ParamFactory, cfg: ModelConfig, cross: bool = False):
 def _project_qkv(p, cfg: ModelConfig, xq, xkv):
     B, Tq, _ = xq.shape
     Tk = xkv.shape[1]
-    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    # head counts come from the *parameter* widths, not the config:
+    # inside a tensor-parallel shard_map body each shard sees only its
+    # slice of the head dims (cfg keeps the global counts)
+    hd = cfg.hd
+    H = p["wq"].shape[-1] // hd
+    KV = p["wk"].shape[-1] // hd
     q = (xq @ p["wq"])
     k = (xkv @ p["wk"])
     v = (xkv @ p["wv"])
@@ -69,6 +75,19 @@ def _project_qkv(p, cfg: ModelConfig, xq, xkv):
         q = rms_head_norm(p["q_norm"], q)
         k = rms_head_norm(p["k_norm"], k)
     return q, k, v
+
+
+def _attn_out(y, p, cfg: ModelConfig):
+    """Output projection; under tensor parallelism a head-sharded
+    ``wo`` (first dim < global H*hd) produces partial sums that psum
+    over the mesh axis so the residual add sees replicated values.  A
+    replicated ``wo`` (heads didn't divide the axis) must not be
+    summed."""
+    out = y @ p["wo"]
+    ax = tp_axis()
+    if ax is not None and p["wo"].shape[0] != cfg.n_heads * cfg.hd:
+        out = jax.lax.psum(out, ax)
+    return out
 
 
 def _gqa_scores_to_out(cfg: ModelConfig, q, k, v, mask):
@@ -375,7 +394,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
         y, new_cache = _paged_attention_fwd(
             p, q, k, v, cfg, cache, batch_pos, block_tables, page_size,
             active, token_mask)
-        return y @ p["wo"], new_cache
+        return _attn_out(y, p, cfg), new_cache
 
     if cache is None:
         positions = jnp.arange(T)
@@ -387,7 +406,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
             pos_b = jnp.broadcast_to(positions[None], (B, T))
             y = _flash_gqa(cfg, q, k, v, pos_b, pos_b, window=window,
                            unroll=unroll)
-            return y @ p["wo"], None
+            return _attn_out(y, p, cfg), None
         qpos = positions[:, None]
         kpos = positions[None, :]
         m = kpos <= qpos
@@ -395,7 +414,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
             m &= (qpos - kpos) < window
         mask = jnp.broadcast_to(m[None], (B, T, T))
         y = _gqa_scores_to_out(cfg, q, k, v, mask)
-        return y @ p["wo"], None
+        return _attn_out(y, p, cfg), None
 
     # ---- cached path (prefill chunk / decode) -----------------------------
     po = jnp.asarray(pos_offset)
@@ -425,8 +444,8 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
             y = _flash_gqa(cfg, q, ckr, cvr, batch_pos,
                            cpr, window=window, unroll=unroll,
                            extra=(k, v, batch_pos))
-        return y @ p["wo"], {"k_delta": k, "v_delta": v,
-                             "pos_delta": batch_pos}
+        return _attn_out(y, p, cfg), {"k_delta": k, "v_delta": v,
+                                   "pos_delta": batch_pos}
     if cfg.pos_embedding == "rope":
         sin, cos = rope_tables(batch_pos, cfg.hd, cfg.rope_theta, cfg.rope_fraction)
         q = apply_rope(q, sin, cos)
@@ -453,7 +472,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
             if window:
                 mask &= (qp - kp) < window
             y = _gqa_scores_to_out(cfg, q, ck, cv, mask)
-        return y @ p["wo"], {"k": ck, "v": cv, "pos": cpos}
+        return _attn_out(y, p, cfg), {"k": ck, "v": cv, "pos": cpos}
     if window and S_buf == window:       # ring buffer
         slots = batch_pos % window
     else:
@@ -484,7 +503,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
         else:
             y = _flash_gqa(cfg, q, ck, cv, batch_pos, cpos, window=window,
                            unroll=unroll)
-        return y @ p["wo"], {"k": ck, "v": cv, "pos": cpos}
+        return _attn_out(y, p, cfg), {"k": ck, "v": cv, "pos": cpos}
     # (external-append handled above; small caches keep the simple path)
     qpos = batch_pos[:, :, None]                        # (B, T, 1)
     kpos = cpos[:, None, :]                             # (B, 1, S_buf)
@@ -492,7 +511,7 @@ def attention_fwd(p, x, cfg: ModelConfig, *, kind: str = "attn",
     if window:
         mask &= (qpos - kpos) < window
     y = _gqa_scores_to_out(cfg, q, ck, cv, mask)
-    return y @ p["wo"], {"k": ck, "v": cv, "pos": cpos}
+    return _attn_out(y, p, cfg), {"k": ck, "v": cv, "pos": cpos}
 
 
 def init_cross_attention(pf: ParamFactory, cfg: ModelConfig):
@@ -509,7 +528,7 @@ def cross_attention_fwd(p, x, cfg: ModelConfig, *, enc_out=None, cache=None):
         q, xk, xv = _project_qkv(p, cfg, x, enc_out)
     y = _gqa_scores_to_out(cfg, q, xk, xv, None)
     new_cache = {"xk": xk, "xv": xv} if cache is not None else None
-    return y @ p["wo"], new_cache
+    return _attn_out(y, p, cfg), new_cache
 
 
 # ==========================================================================

@@ -1,0 +1,43 @@
+"""Tensor-parallel trace context for the model forward.
+
+The forward functions in ``layers.py`` / ``mixers.py`` are written
+against *local* parameter shards: inside a ``shard_map`` body the
+attention/MLP matmuls see only their slice of the heads/ffn/expert
+dims, and the output projections must ``psum`` over the mesh axis so
+the residual adds observe replicated activations.
+
+Whether a psum is needed is decided at trace time, the same way
+``mixers.SEQ_SHARD`` configures sequence sharding: the engine runner
+sets the mesh axis name here (``tp_context``) around tracing its
+``shard_map`` body, and every collective site consults ``tp_axis()``
+*and* compares the local parameter width against the config's global
+dim — a dim that did not divide the axis is replicated, computes the
+full output on every shard, and must NOT be summed.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+# module-level trace state, set only while tracing a shard_map body
+TP_SHARD: dict = {}
+
+
+def tp_axis() -> Optional[str]:
+    """Mesh axis name of the active tensor-parallel trace, or None."""
+    return TP_SHARD.get("axis")
+
+
+@contextmanager
+def tp_context(axis: str):
+    """Mark the enclosed trace as running inside a shard_map over
+    ``axis``; forward functions emit psums where params are sharded."""
+    prev = TP_SHARD.get("axis")
+    TP_SHARD["axis"] = axis
+    try:
+        yield
+    finally:
+        if prev is None:
+            TP_SHARD.pop("axis", None)
+        else:
+            TP_SHARD["axis"] = prev

@@ -39,7 +39,7 @@ import json
 import threading
 import time
 import uuid
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -146,6 +146,11 @@ class ServerConfig:
     prefix_cache: bool = False
     page_size: int = 32
     pages_per_instance: int = 4096
+    # shard width per instance: uniform int, or a per-instance list
+    # (iid takes widths[iid % len]); engine pools need that many XLA
+    # devices, the sim prices the widths in its cost model.  The
+    # per-instance "devices" gauge lands on /metrics either way.
+    devices_per_instance: Union[int, List[int]] = 1
     default_slo: str = "standard"    # class for requests without "slo"
     max_tokens_cap: int = 512        # hard per-request output cap
     retain_finished: bool = False    # True: keep state for session.metrics()
@@ -186,7 +191,8 @@ def make_session(cfg: ServerConfig):
         params = init_params(mcfg, jax.random.PRNGKey(0))
         backend = EngineBackend(mcfg, params, n_slots=cfg.engine_slots,
                                 max_len=cfg.engine_max_len,
-                                prefix_cache=cfg.prefix_cache)
+                                prefix_cache=cfg.prefix_cache,
+                                devices_per_instance=cfg.devices_per_instance)
         policy = DynaServePolicy(backend.cost, cfg.slo)
     else:
         from repro.configs import get_config
@@ -198,9 +204,11 @@ def make_session(cfg: ServerConfig):
         if cfg.prefix_cache:
             backend = SimBackend(cost, page_size=cfg.page_size,
                                  pages_per_instance=cfg.pages_per_instance,
-                                 prefix_cache=True)
+                                 prefix_cache=True,
+                                 devices_per_instance=cfg.devices_per_instance)
         else:
-            backend = SimBackend(cost)
+            backend = SimBackend(
+                cost, devices_per_instance=cfg.devices_per_instance)
         policy = DynaServePolicy(cost, cfg.slo)
     return ServeSession(backend, policy, scfg)
 

@@ -11,8 +11,8 @@ from typing import List, Optional, Tuple
 
 from repro.core.costmodel import BatchCostModel
 from repro.core.elastic import (
-    DrainInstance, ElasticConfig, InstanceStat, MigrateWork, PoolController,
-    ScaleUp, SetRoleBias,
+    DrainInstance, ElasticConfig, InstanceStat, MergeInstances, MigrateWork,
+    PoolController, ScaleUp, SetRoleBias, SplitInstance,
 )
 from repro.core.global_scheduler import GlobalScheduler, InstanceView
 from repro.core.kv_transfer import monolithic_exposed, plan_chunked_transfer
@@ -152,7 +152,8 @@ class DynaServePolicy(BasePolicy):
         return [InstanceView(i.iid, self._queued_view(i), i.draining,
                              i.role_bias,
                              cached_prefix=(sim.backend.cached_prefix(
-                                 i.iid, r) if r is not None else 0))
+                                 i.iid, r) if r is not None else 0),
+                             cost=sim.backend.cost_for(i.iid))
                 for i in sim.pool_instances()]
 
     def place(self, r: Request, sim, now: float):
@@ -260,13 +261,15 @@ class ElasticDynaServePolicy(DynaServePolicy):
             view = self._queued_view(inst)
             out.append(InstanceStat(
                 iid=inst.iid,
-                drain_time=self.gs.predictor.drain_time(view),
+                drain_time=self.gs.predictor.drain_time(
+                    view, cost=sim.backend.cost_for(inst.iid)),
                 queued_prefill_tokens=sum(q.prefill_remaining for q in view),
                 queued_decode_tokens=sum(q.decode_remaining for q in view),
                 n_queued=inst.n_queued,
                 draining=inst.draining,
                 role_bias=inst.role_bias,
                 mem_pressure=sim.kv_pressure(inst.iid),
+                devices=sim.backend.devices_for(inst.iid),
             ))
         return out
 
@@ -276,9 +279,12 @@ class ElasticDynaServePolicy(DynaServePolicy):
                 payload = {"action": type(act).__name__,
                            "reason": getattr(act, "reason", ""),
                            "signals": dict(self.controller.last_signals)}
-                for fld in ("iid", "src", "dst", "max_micros", "bias"):
+                for fld in ("iid", "src", "dst", "max_micros", "bias",
+                            "donors", "devices"):
                     if hasattr(act, fld):
-                        payload[fld] = getattr(act, fld)
+                        val = getattr(act, fld)
+                        payload[fld] = list(val) if isinstance(val, tuple) \
+                            else val
                 if isinstance(act, ScaleUp):
                     # the newcomer joins at the pool's current role
                     # target; replay needs that value to pin the action
@@ -296,3 +302,20 @@ class ElasticDynaServePolicy(DynaServePolicy):
                 sim.migrate(act.src, act.dst, act.max_micros)
             elif isinstance(act, SetRoleBias):
                 sim.instances[act.iid].scheduler.set_role_bias(act.bias)
+            elif isinstance(act, MergeInstances):
+                # width <-> count trade: retire the narrow donors and
+                # attach one sharded instance twice as wide in their
+                # place (the controller already queued evacuation
+                # migrations for the donors' queued work)
+                for iid in act.donors:
+                    sim.drain_instance(iid)
+                inst = sim.add_instance(devices=act.devices)
+                inst.scheduler.set_role_bias(self.controller.target_bias)
+            elif isinstance(act, SplitInstance):
+                # reverse trade: retire the wide member, attach two
+                # narrower instances to recover placement parallelism
+                sim.drain_instance(act.iid)
+                for _ in range(2):
+                    inst = sim.add_instance(devices=act.devices)
+                    inst.scheduler.set_role_bias(
+                        self.controller.target_bias)

@@ -108,7 +108,8 @@ class SimBackend(Backend):
                  host_overhead: float = 0.0,
                  interleave: Optional[InterleaveSchedule] = None,
                  kv_precision="bf16",
-                 precision_policy: Optional[PrecisionPolicy] = None):
+                 precision_policy: Optional[PrecisionPolicy] = None,
+                 devices_per_instance=1):
         if bool(page_size) != bool(pages_per_instance):
             raise ValueError(
                 "page_size and pages_per_instance must be set together "
@@ -144,6 +145,12 @@ class SimBackend(Backend):
         if isinstance(precision_policy, str):
             precision_policy = PrecisionPolicy.parse(precision_policy)
         self.precision_policy = precision_policy
+        # per-instance shard width (int | dict | sequence, exactly the
+        # engine backend's spec): a TP=n member's batches are priced by
+        # a tp_degree=n cost model, so placement/admission/split
+        # decisions stay byte-identical across the two substrates
+        self.devices_per_instance = devices_per_instance
+        self._costs: Dict[int, BatchCostModel] = {1: cost}
         # modeled wire savings of quantized handoffs, per destination
         # instance (the engine backend meters the same quantity)
         self.handoff_bytes_saved = 0
@@ -179,7 +186,39 @@ class SimBackend(Backend):
             "interleave": None if il is None else {
                 "seed": il.seed, "window": il.window,
                 "width": il.width, "mode": il.mode},
+            "devices_per_instance": (self.devices_per_instance
+                                     if isinstance(self.devices_per_instance,
+                                                   int)
+                                     else "mixed"),
         }
+
+    # ---------------- sharded instances ----------------
+    def devices_for(self, iid: int) -> int:
+        spec = self.devices_per_instance
+        if isinstance(spec, dict):
+            spec = spec.get(iid, spec.get("default", 1))
+        elif isinstance(spec, (list, tuple)):
+            spec = spec[iid % len(spec)]
+        return max(1, int(spec))
+
+    def set_devices(self, iid: int, n: int) -> None:
+        spec = self.devices_per_instance
+        if not isinstance(spec, dict):
+            if isinstance(spec, (list, tuple)):
+                spec = {i: spec[i % len(spec)] for i in range(len(spec))}
+            else:
+                spec = {"default": int(spec)}
+            self.devices_per_instance = spec
+        spec[iid] = max(1, int(n))
+
+    def cost_for(self, iid: int) -> BatchCostModel:
+        n = self.devices_for(iid)
+        if n not in self._costs:
+            base = self.cost
+            self._costs[n] = BatchCostModel(
+                base.cfg, base.hw, tp_degree=n,
+                dtype_bytes=base.dtype_bytes)
+        return self._costs[n]
 
     # ---------------- pool lifecycle ----------------
     def spawn(self, iid: int) -> None:
@@ -393,7 +432,7 @@ class SimBackend(Backend):
         """Modeled occupancy sample for /metrics — the same keys the
         engine backend reports, so dashboards read identically over
         either substrate."""
-        out: Dict[str, float] = {}
+        out: Dict[str, float] = {"devices": float(self.devices_for(iid))}
         if self.page_size:
             pf = self.pool_precision(iid).frames
             out["kv_pages_free"] = float(self.free_pages(iid))
@@ -464,7 +503,8 @@ class SimBackend(Backend):
         # the synchronous loop pays the host-side dispatch cost serially
         # before every batch — exactly what dispatch-ahead hides
         return ExecResult(latency=self.host_overhead +
-                          self.cost.latency(items), deferred=True)
+                          self.cost_for(inst.iid).latency(items),
+                          deferred=True)
 
     def dispatch(self, inst: InstanceState,
                  grants: Sequence[Tuple[MicroState, int]],
@@ -484,7 +524,7 @@ class SimBackend(Backend):
         items: List[WorkItem] = \
             [WorkItem("prefill", g, m.pos) for m, g in grants] + \
             [WorkItem("decode", 1, m.pos) for m in decs]
-        device = self.cost.latency(items)
+        device = self.cost_for(inst.iid).latency(items)
         start = max(now + self.host_overhead, self._device_free.get(inst.iid, 0.0))
         done = start + device
         self._device_free[inst.iid] = done
